@@ -1,0 +1,83 @@
+"""Paper Table 3 — test-retest reliability under random re-initialization.
+
+The paper quantifies agreement between independently trained runs with
+the intraclass correlation coefficient (ICC); NODE-ACA shows higher ICC
+than the discrete net.  Here: N runs with independent seeds, then
+
+  * ICC(1) over the per-example correctness matrix (one-way random,
+    single rater) — the paper's ICC1,
+  * mean pairwise prediction agreement (a model-free reliability proxy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import spiral_classification
+from repro.optim import adamw, constant
+from repro.optim.adamw import apply_updates
+from .bench_classification import forward, init_params
+from .common import emit
+
+
+def _train_seed(mode, seed, steps, x, y):
+    p = init_params(jax.random.PRNGKey(seed))
+    opt = adamw(constant(3e-3))
+    st = opt.init(p)
+
+    @jax.jit
+    def step(p, st):
+        def loss(p):
+            lg = forward(p, x, mode=mode, grad_method="aca")
+            ll = jax.nn.log_softmax(lg)
+            return -jnp.take_along_axis(ll, y[:, None], 1).mean()
+
+        l, g = jax.value_and_grad(loss)(p)
+        up, st2 = opt.update(g, st, p)
+        return apply_updates(p, up), st2, l
+
+    for _ in range(steps):
+        p, st, _ = step(p, st)
+    return p
+
+
+def icc1(mat: np.ndarray) -> float:
+    """One-way random single-rater ICC over (targets, raters)."""
+    n, k = mat.shape
+    grand = mat.mean()
+    row_means = mat.mean(axis=1)
+    msb = k * ((row_means - grand) ** 2).sum() / max(n - 1, 1)
+    msw = ((mat - row_means[:, None]) ** 2).sum() / max(n * (k - 1), 1)
+    denom = msb + (k - 1) * msw
+    return float((msb - msw) / denom) if denom > 0 else 0.0
+
+
+def run(quick: bool = False):
+    n_runs = 4 if quick else 8
+    steps = 100 if quick else 300
+    x, y = spiral_classification(400 if quick else 1200, seed=0)
+    xt, yt = spiral_classification(300, seed=7)
+
+    for mode in ("node", "discrete"):
+        preds, accs = [], []
+        for s in range(n_runs):
+            p = _train_seed(mode, 1000 + s, steps, x, y)
+            lg = forward(p, xt, mode=mode, grad_method="aca")
+            pr = np.asarray(jnp.argmax(lg, -1))
+            preds.append(pr)
+            accs.append(float((pr == np.asarray(yt)).mean()))
+        correct = np.stack([(p == np.asarray(yt)).astype(float)
+                            for p in preds], axis=1)   # (targets, raters)
+        agree = np.mean([
+            (preds[i] == preds[j]).mean()
+            for i in range(n_runs) for j in range(i + 1, n_runs)])
+        emit(f"table3_icc1/{mode}", f"{icc1(correct):.4f}",
+             f"{n_runs} runs, acc {np.mean(accs):.3f}±{np.std(accs):.3f}")
+        emit(f"table3_pairwise_agreement/{mode}", f"{agree:.4f}",
+             "mean pairwise prediction agreement")
+
+
+if __name__ == "__main__":
+    run()

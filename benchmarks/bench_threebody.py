@@ -1,0 +1,163 @@
+"""Paper Table 5 / Fig. 8 — the three-body problem.
+
+Ground truth: our Dopri5 at rtol=1e-8 on Newton's equations (Eq. 32)
+with unequal masses and arbitrary initial conditions.  Models:
+
+  * ODE  — f is Eq. 32 itself, only the 3 masses are unknown (full
+    physical knowledge), fit by gradient descent THROUGH the solver
+    with each gradient method;
+  * NODE — f = FC(augmented input) (partial knowledge, Eq. 33/34);
+  * LSTM — sequence model on raw coordinates (no knowledge).
+
+Train on t∈[0,1], report trajectory MSE on t∈[0,2] (extrapolation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import odeint
+from repro.data.threebody import simulate_three_body, three_body_rhs
+from repro.optim import adamw, constant, exponential_decay
+from repro.optim.adamw import apply_updates
+from .common import emit
+
+
+def _traj(masses_or_params, state0, ts, rhs, grad_method, args_builder):
+    ys, _ = odeint(rhs, state0, ts, args_builder(masses_or_params),
+                   solver="dopri5", grad_method=grad_method,
+                   rtol=1e-5, atol=1e-5, max_steps=512)
+    return ys
+
+
+def _aug_features(state):
+    """Eq. 33: positions, pairwise displacements at powers 1..3."""
+    r, v = state["r"], state["v"]          # (3,3)
+    feats = [r.reshape(-1), v.reshape(-1)]
+    for i in range(3):
+        for j in range(3):
+            if i == j:
+                continue
+            d = r[i] - r[j]
+            n = jnp.sqrt((d ** 2).sum() + 1e-8)
+            feats += [d, d / n, d / n ** 2, d / n ** 3]
+    return jnp.concatenate(feats)
+
+
+def run(quick: bool = False):
+    n_pts = 64 if quick else 128
+    fit_steps = 60 if quick else 200
+
+    ts_all, rs, vs, m_true = simulate_three_body(
+        n_points=2 * n_pts, t_max=2.0, masses=(1.0, 0.8, 1.2),
+        rtol=1e-8, atol=1e-8)
+    n_half = n_pts
+    ts_train = ts_all[:n_half]
+    state0 = {"r": rs[0], "v": vs[0]}
+
+    # ------------------------------------------------ ODE (mass fitting)
+    for gm in ("aca", "adjoint", "naive"):
+        log_m = jnp.zeros(3)               # start from equal unit masses
+        opt = adamw(constant(0.05))
+        st = opt.init(log_m)
+
+        @jax.jit
+        def step(log_m, st):
+            def loss(log_m):
+                ys = _traj(log_m, state0, ts_train, three_body_rhs, gm,
+                           lambda lm: (jnp.exp(lm),))
+                return ((ys["r"] - rs[:n_half]) ** 2).mean()
+
+            l, g = jax.value_and_grad(loss)(log_m)
+            up, st2 = opt.update(g, st, log_m)
+            return apply_updates(log_m, up), st2, l
+
+        for _ in range(fit_steps):
+            log_m, st, l = step(log_m, st)
+
+        ys = _traj(log_m, state0, ts_all, three_body_rhs, "aca",
+                   lambda lm: (jnp.exp(lm),))
+        mse = float(((ys["r"] - rs) ** 2).mean())
+        emit(f"table5_ode_mse/{gm}", f"{mse:.6f}",
+             f"[0,2]yr; fitted m={np.round(np.exp(np.asarray(log_m)), 3)}"
+             f" true={np.asarray(m_true)}")
+
+    # ------------------------------------------------ NODE (aug input)
+    feat_dim = int(_aug_features(state0).shape[0])
+    w = jax.random.normal(jax.random.PRNGKey(0), (feat_dim, 9)) * 0.01
+
+    def node_rhs(t, state, w):
+        acc = (_aug_features(state) @ w).reshape(3, 3)
+        return {"r": state["v"], "v": acc}
+
+    for gm in (("aca",) if quick else ("aca", "adjoint", "naive")):
+        p = w
+        opt = adamw(constant(3e-3))
+        st = opt.init(p)
+
+        @jax.jit
+        def nstep(p, st):
+            def loss(p):
+                ys = _traj(p, state0, ts_train, node_rhs, gm,
+                           lambda pp: (pp,))
+                return ((ys["r"] - rs[:n_half]) ** 2).mean()
+
+            l, g = jax.value_and_grad(loss)(p)
+            up, st2 = opt.update(g, st, p)
+            return apply_updates(p, up), st2, l
+
+        for _ in range(fit_steps):
+            p, st, l = nstep(p, st)
+        ys = _traj(p, state0, ts_all, node_rhs, "aca", lambda pp: (pp,))
+        mse = float(((ys["r"] - rs) ** 2).mean())
+        emit(f"table5_node_mse/{gm}", f"{mse:.6f}", "aug-input FC dynamics")
+
+    # ------------------------------------------------ LSTM (no knowledge)
+    HID = 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    lstm = {
+        "wx": jax.random.normal(ks[0], (9, 4 * HID)) * 0.2,
+        "wh": jax.random.normal(ks[1], (HID, 4 * HID)) * 0.2,
+        "out": jax.random.normal(ks[2], (HID, 9)) * 0.2,
+    }
+
+    def lstm_roll(p, x0, n):
+        def cell(carry, _):
+            h, c, x = carry
+            z = x @ p["wx"] + h @ p["wh"]
+            i, f, g, o = jnp.split(z, 4)
+            c2 = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * \
+                jnp.tanh(g)
+            h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+            x2 = x + h2 @ p["out"]        # residual next-step prediction
+            return (h2, c2, x2), x2
+
+        (_, _, _), xs = jax.lax.scan(
+            cell, (jnp.zeros(HID), jnp.zeros(HID), x0), None, length=n)
+        return xs
+
+    flat = rs.reshape(len(ts_all), 9)
+    p = lstm
+    opt = adamw(constant(3e-3))
+    st = opt.init(p)
+
+    @jax.jit
+    def lstep(p, st):
+        def loss(p):
+            pred = lstm_roll(p, flat[0], n_half - 1)
+            return ((pred - flat[1:n_half]) ** 2).mean()
+
+        l, g = jax.value_and_grad(loss)(p)
+        up, st2 = opt.update(g, st, p)
+        return apply_updates(p, up), st2, l
+
+    for _ in range(3 * fit_steps):
+        p, st, l = lstep(p, st)
+    pred = lstm_roll(p, flat[0], len(ts_all) - 1)
+    mse = float(((pred - flat[1:]) ** 2).mean())
+    emit("table5_lstm_mse", f"{mse:.6f}", "no physical knowledge")
+
+
+if __name__ == "__main__":
+    run()

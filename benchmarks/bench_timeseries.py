@@ -1,0 +1,125 @@
+"""Paper Table 4 — latent-ODE on irregularly-sampled series (Mujoco
+stand-in), interpolation MSE for ACA vs adjoint vs naive + GRU baseline.
+
+Latent-ODE: a GRU encoder consumes (Δt, y) pairs backwards to produce
+z0; the decoder integrates dz/dt = f(z) through the *irregular*
+observation times with one odeint call (multi-time outputs) and reads
+out ŷ(t_i).  The only difference between the three columns is the
+gradient method — exactly the paper's ablation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import odeint
+from repro.data import irregular_series_batch
+from repro.optim import adamw, constant
+from repro.optim.adamw import apply_updates
+from .common import emit
+
+OBS, LAT, HID = 8, 8, 32
+
+
+def init_params(key):
+    ks = jax.random.split(key, 8)
+    s = 0.3
+    return {
+        # GRU encoder
+        "wz": jax.random.normal(ks[0], (OBS + 1 + HID, HID)) * s,
+        "wr": jax.random.normal(ks[1], (OBS + 1 + HID, HID)) * s,
+        "wh": jax.random.normal(ks[2], (OBS + 1 + HID, HID)) * s,
+        "enc_out": jax.random.normal(ks[3], (HID, LAT)) * s,
+        # latent dynamics
+        "f1": jax.random.normal(ks[4], (LAT, HID)) * s,
+        "f2": jax.random.normal(ks[5], (HID, LAT)) * s,
+        # readout
+        "dec": jax.random.normal(ks[6], (LAT, OBS)) * s,
+    }
+
+
+def gru_encode(p, ts, ys):
+    """Backward-in-time GRU over (Δt, y)."""
+    dts = jnp.diff(ts, append=ts[-1:])
+
+    def cell(h, inp):
+        x = jnp.concatenate([inp, h])
+        z = jax.nn.sigmoid(x @ p["wz"])
+        r = jax.nn.sigmoid(x @ p["wr"])
+        hh = jnp.tanh(jnp.concatenate([inp, r * h]) @ p["wh"])
+        return (1 - z) * h + z * hh, None
+
+    inputs = jnp.concatenate([ys, dts[:, None]], axis=1)[::-1]
+    h, _ = jax.lax.scan(cell, jnp.zeros(HID), inputs)
+    return h @ p["enc_out"]
+
+
+def decode(p, z0, ts, grad_method):
+    def f(t, z, f1, f2):
+        return jnp.tanh(z @ f1) @ f2
+
+    ys, _ = odeint(f, z0, ts, (p["f1"], p["f2"]), solver="dopri5",
+                   grad_method=grad_method, rtol=1e-4, atol=1e-4,
+                   max_steps=128)
+    return ys @ p["dec"]
+
+
+def run(quick: bool = False):
+    n_obs = 16
+    batch = 24 if quick else 48
+    steps = 120 if quick else 300
+    data = irregular_series_batch(batch=batch, n_obs=n_obs, obs_dim=OBS,
+                                  seed=0)
+    test = irregular_series_batch(batch=16, n_obs=n_obs, obs_dim=OBS,
+                                  seed=99)
+
+    def mse(p, d, gm):
+        def one(ts, ys):
+            z0 = gru_encode(p, ts, ys)
+            return ((decode(p, z0, ts, gm) - ys) ** 2).mean()
+        return jax.vmap(one)(d["ts"], d["ys"]).mean()
+
+    for gm in ("aca", "adjoint", "naive"):
+        p = init_params(jax.random.PRNGKey(0))
+        opt = adamw(constant(3e-3))
+        st = opt.init(p)
+
+        @jax.jit
+        def step(p, st):
+            l, g = jax.value_and_grad(lambda p: mse(p, data, gm))(p)
+            up, st2 = opt.update(g, st, p)
+            return apply_updates(p, up), st2, l
+
+        for _ in range(steps):
+            p, st, l = step(p, st)
+        test_mse = float(mse(p, test, "aca"))
+        emit(f"table4_latentode_mse/{gm}", f"{test_mse:.5f}",
+             f"irregular-series stand-in, {steps} steps")
+
+    # GRU-only baseline: predict y(t_i) from the encoder state directly
+    p = init_params(jax.random.PRNGKey(0))
+    opt = adamw(constant(3e-3))
+    st = opt.init(p)
+
+    def rnn_mse(p, d):
+        def one(ts, ys):
+            z0 = gru_encode(p, ts, ys)
+            pred = jnp.broadcast_to(z0 @ p["dec"], ys.shape)
+            return ((pred - ys) ** 2).mean()
+        return jax.vmap(one)(d["ts"], d["ys"]).mean()
+
+    @jax.jit
+    def rstep(p, st):
+        l, g = jax.value_and_grad(lambda p: rnn_mse(p, data))(p)
+        up, st2 = opt.update(g, st, p)
+        return apply_updates(p, up), st2, l
+
+    for _ in range(steps):
+        p, st, l = rstep(p, st)
+    emit("table4_rnn_baseline_mse", f"{float(rnn_mse(p, test)):.5f}",
+         "GRU encoder + static readout")
+
+
+if __name__ == "__main__":
+    run()

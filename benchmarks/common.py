@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    row = f"{name},{value},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.monotonic() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

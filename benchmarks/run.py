@@ -1,0 +1,58 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Default is quick mode (CPU-friendly sizes); ``--full`` uses the larger
+settings.  Output: ``name,value,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (bench_classification, bench_method_costs,
+               bench_node_lm, bench_reliability, bench_reverse_error,
+               bench_solver_robustness, bench_threebody,
+               bench_timeseries, bench_toy_gradient)
+from .common import emit
+
+BENCHES = [
+    ("toy_gradient (Fig.6)", bench_toy_gradient.run),
+    ("reverse_error (Fig.4/5)", bench_reverse_error.run),
+    ("method_costs (Table 1)", bench_method_costs.run),
+    ("classification (Table 2/Fig.7)", bench_classification.run),
+    ("reliability (Table 3)", bench_reliability.run),
+    ("solver_robustness (Tables 6/7)", bench_solver_robustness.run),
+    ("timeseries (Table 4)", bench_timeseries.run),
+    ("threebody (Table 5/Fig.8)", bench_threebody.run),
+    ("node_lm (beyond-paper: LM ablation)", bench_node_lm.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            fn(quick=not args.full)
+            emit(f"bench_runtime_s/{name.split(' ')[0]}",
+                 f"{time.monotonic() - t0:.1f}", "")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Latent-ODE on irregularly-sampled time series (paper Sec. 4.3).
+
+A GRU encoder maps irregular (t_i, y_i) observations to a latent
+initial state; the decoder integrates latent dynamics through the
+irregular time grid in ONE odeint call (multi-time outputs) with ACA
+gradients.
+
+    PYTHONPATH=src python examples/latent_timeseries.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))      # repo root (for benchmarks.*)
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_timeseries import (decode, gru_encode, init_params)
+from repro.data import irregular_series_batch
+from repro.optim import adamw, constant
+from repro.optim.adamw import apply_updates
+
+data = irregular_series_batch(batch=32, n_obs=16, obs_dim=8, seed=0)
+test = irregular_series_batch(batch=8, n_obs=16, obs_dim=8, seed=123)
+
+
+def mse(p, d):
+    def one(ts, ys):
+        z0 = gru_encode(p, ts, ys)
+        return ((decode(p, z0, ts, "aca") - ys) ** 2).mean()
+    return jax.vmap(one)(d["ts"], d["ys"]).mean()
+
+
+p = init_params(jax.random.PRNGKey(0))
+opt = adamw(constant(3e-3))
+st = opt.init(p)
+
+
+@jax.jit
+def step(p, st):
+    l, g = jax.value_and_grad(lambda p: mse(p, data))(p)
+    up, st = opt.update(g, st, p)
+    return apply_updates(p, up), st, l
+
+
+for i in range(200):
+    p, st, l = step(p, st)
+    if i % 25 == 0:
+        print(f"step {i:4d}  train mse {float(l):.5f}")
+
+print(f"\ntest interpolation MSE: {float(mse(p, test)):.5f}")

@@ -1,0 +1,58 @@
+"""Three-body problem with physical knowledge (paper Sec. 4.4).
+
+Fits the three unknown planet masses by back-propagating through the
+ODE solver with ACA: the dynamics f ARE Newton's equations (Eq. 32);
+only 3 scalars are learned.
+
+    PYTHONPATH=src python examples/three_body.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import odeint
+from repro.data.threebody import simulate_three_body, three_body_rhs
+from repro.optim import adamw, constant
+from repro.optim.adamw import apply_updates
+
+TRUE_MASSES = (1.0, 0.8, 1.2)
+
+print("simulating ground truth (dopri5 @ rtol 1e-8)...")
+ts, rs, vs, m_true = simulate_three_body(
+    n_points=128, t_max=2.0, masses=TRUE_MASSES, rtol=1e-8, atol=1e-8)
+n_train = 64                        # train on [0, 1] yr
+state0 = {"r": rs[0], "v": vs[0]}
+
+log_m = jnp.zeros(3)                # init: equal unit masses
+opt = adamw(constant(0.05))
+opt_state = opt.init(log_m)
+
+
+@jax.jit
+def step(log_m, opt_state):
+    def loss(log_m):
+        ys, _ = odeint(three_body_rhs, state0, ts[:n_train],
+                       (jnp.exp(log_m),), solver="dopri5",
+                       grad_method="aca", rtol=1e-5, atol=1e-5,
+                       max_steps=512)
+        return ((ys["r"] - rs[:n_train]) ** 2).mean()
+
+    l, g = jax.value_and_grad(loss)(log_m)
+    updates, opt_state = opt.update(g, opt_state, log_m)
+    return apply_updates(log_m, updates), opt_state, l
+
+
+for i in range(120):
+    log_m, opt_state, l = step(log_m, opt_state)
+    if i % 20 == 0:
+        print(f"step {i:4d} loss {float(l):.3e} "
+              f"masses {np.round(np.exp(np.asarray(log_m)), 4)}")
+
+ys, _ = odeint(three_body_rhs, state0, ts, (jnp.exp(log_m),),
+               solver="dopri5", grad_method="aca", rtol=1e-6, atol=1e-6,
+               max_steps=1024)
+mse = float(((ys["r"] - rs) ** 2).mean())
+print(f"\nrecovered masses: {np.round(np.exp(np.asarray(log_m)), 4)} "
+      f"(true: {np.asarray(m_true)})")
+print(f"trajectory MSE over [0, 2] yr (train was [0, 1]): {mse:.3e}")

@@ -1,0 +1,7 @@
+"""repro.ckpt — atomic, resumable checkpointing."""
+
+from .checkpoint import (CheckpointManager, save_checkpoint,
+                         restore_checkpoint, latest_step)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

@@ -1,0 +1,67 @@
+"""repro.configs — one module per assigned architecture + registry.
+
+    from repro.configs import get_config, get_smoke_config, ARCHS, SHAPES
+
+Every ``<arch>.py`` exports ``CONFIG`` (the exact published dims) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests).  ``SHAPES``
+maps the assignment's input-shape names to (seq_len, global_batch, kind);
+``shape_plan(arch, shape)`` resolves skips (long_500k is sub-quadratic
+archs only — see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "qwen1_5_32b",
+    "qwen2_72b",
+    "command_r_plus_104b",
+    "command_r_35b",
+    "deepseek_moe_16b",
+    "qwen3_moe_235b_a22b",
+    "llava_next_34b",
+    "musicgen_medium",
+    "recurrentgemma_9b",
+    "mamba2_2_7b",
+    # the paper's own model family (NODE-mode image classifier)
+    "node18_cifar",
+)
+
+# assignment shape table: name -> (seq_len, global_batch, step kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# archs with sub-quadratic attention that run long_500k
+LONG_CONTEXT_ARCHS = ("recurrentgemma_9b", "mamba2_2_7b")
+
+
+def _norm(name: str) -> str:
+    return name.lower().replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.SMOKE
+
+
+def shape_plan(arch: str, shape: str) -> Optional[Tuple[int, int, str]]:
+    """(seq_len, global_batch, kind) or None if the cell is skipped."""
+    arch = _norm(arch)
+    if shape not in SHAPES:
+        raise KeyError(f"unknown shape {shape!r}; have {sorted(SHAPES)}")
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return None    # full-attention archs skip 500k (see DESIGN.md)
+    return SHAPES[shape]

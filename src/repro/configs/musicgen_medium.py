@@ -1,0 +1,29 @@
+"""MusicGen-medium  [audio]  — decoder-only over EnCodec tokens:
+48L d_model=1536 24H (kv=24, MHA) d_ff=6144 vocab=2048 (codebook size).
+The EnCodec frontend is a STUB supplying precomputed frame embeddings.
+[arXiv:2306.05284; hf]
+
+MusicGen uses a plain (non-gated) GeLU FFN."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="dense",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    qkv_bias=False,
+    rope_theta=1e4,
+    act="gelu",
+    norm="layernorm",
+    norm_eps=1e-5,
+    frontend="audio",
+)
+
+SMOKE = CONFIG.scaled(
+    name="musicgen-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160, vocab=256)

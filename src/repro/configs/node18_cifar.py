@@ -1,0 +1,32 @@
+"""NODE18 — the paper's own model family (Sec. 4.2).
+
+The paper converts ResNet18's residual blocks into ODE blocks with the
+same parameter count (Eq. 30 → 31) and trains with HeunEuler at
+rtol=atol=1e-2 (Appendix D).  Offline, the image task is replaced by the
+spiral classification stand-in (``repro.data.spiral_classification``);
+here we keep a transformer-backbone counterpart so NODE mode exercises
+the very same stack the LM archs use — this is the config the NODE-mode
+dry-run rows lower.
+
+``CONFIG`` is a ~100M-param continuous-depth LM; ``SMOKE`` the reduced
+version.  NODE mode itself is switched on through ``RunConfig.node``."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="node18-cifar",
+    family="dense",
+    n_layers=18,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=32768,
+    rope_theta=1e4,
+    act="silu",
+    norm="rmsnorm",
+)
+
+SMOKE = CONFIG.scaled(
+    name="node18-smoke",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160, vocab=512)

@@ -1,0 +1,35 @@
+"""repro.core — Adaptive Checkpoint Adjoint (ACA) gradient estimation.
+
+Public API:
+    odeint(f, z0, ts, args, solver=, grad_method="aca", ...)
+    odeint_final(f, z0, t0, t1, args, ...)
+    node_block_apply / NodeConfig — continuous-depth blocks for model stacks
+    get_tableau / Tableau — explicit RK solvers (Euler..Dopri5)
+"""
+
+from .api import GRAD_METHODS, odeint, odeint_final
+from .controller import ControllerConfig
+from .integrate import Checkpoints, SolveStats, adaptive_while_solve, fixed_grid_solve
+from .node_block import NodeConfig, node_block_apply
+from .odeint_aca import odeint_aca, odeint_aca_fixed
+from .odeint_adjoint import odeint_adjoint, odeint_adjoint_fixed
+from .odeint_naive import odeint_naive, odeint_naive_fixed
+from .stepper import rk_step
+from .tableaus import (
+    ADAPTIVE_SOLVERS,
+    FIXED_SOLVERS,
+    Tableau,
+    get_tableau,
+)
+
+__all__ = [
+    "odeint", "odeint_final", "GRAD_METHODS",
+    "ControllerConfig", "SolveStats", "Checkpoints",
+    "adaptive_while_solve", "fixed_grid_solve",
+    "NodeConfig", "node_block_apply",
+    "odeint_aca", "odeint_aca_fixed",
+    "odeint_adjoint", "odeint_adjoint_fixed",
+    "odeint_naive", "odeint_naive_fixed",
+    "rk_step", "Tableau", "get_tableau",
+    "ADAPTIVE_SOLVERS", "FIXED_SOLVERS",
+]

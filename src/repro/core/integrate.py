@@ -1,0 +1,268 @@
+"""Forward integration engines shared by every gradient method.
+
+Two engines over the same Runge-Kutta stepper:
+
+* ``adaptive_while_solve`` — ``lax.while_loop`` with a flattened
+  trial/accept loop (the paper's Algorithm 1 with the inner stepsize search
+  and outer time advance fused into one loop).  Dynamic trip count, *not*
+  reverse-differentiable — used by ACA forward (with trajectory
+  checkpoints), by the adjoint method's forward and backward solves, and
+  for inference.  Accepted discretization points (t_i, h_i, z_i) are
+  written into a fixed-capacity buffer: the paper's trajectory checkpoint.
+
+* ``fixed_grid_solve`` — ``lax.scan`` over a precomputed grid.  Fully
+  differentiable (this is also the "naive" method for fixed-step solvers).
+
+Both engines integrate through a sorted array of evaluation times ``ts``
+(the solver is forced to land exactly on each ``ts[k]``), supporting
+latent-ODE style multi-time outputs.  States are arbitrary pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .controller import ControllerConfig, initial_stepsize, propose_stepsize
+from .stepper import error_ratio, rk_step
+from .tableaus import Tableau
+
+PyTree = Any
+
+
+class SolveStats(NamedTuple):
+    n_steps: jnp.ndarray      # accepted steps (paper's N_t)
+    n_trials: jnp.ndarray     # total ψ trials (N_t * m)
+    nfe: jnp.ndarray          # number of f evaluations
+    overflow: jnp.ndarray     # bool: checkpoint buffer exhausted
+
+
+class Checkpoints(NamedTuple):
+    """The paper's trajectory checkpoint: accepted grid + states.
+
+    ``z`` holds z_i at the *start* of accepted interval i; ``t``/``h`` its
+    start time and accepted stepsize; ``out_idx`` the index into ``ts`` that
+    the interval's endpoint landed on (or -1).  Only slots [0, n) are valid.
+    """
+    t: jnp.ndarray            # (max_steps,)
+    h: jnp.ndarray            # (max_steps,)
+    z: PyTree                 # (max_steps, ...) per leaf
+    out_idx: jnp.ndarray      # (max_steps,) int32
+    n: jnp.ndarray            # number of valid slots
+
+
+def _empty_buffer(z0: PyTree, max_steps: int) -> PyTree:
+    return jax.tree.map(
+        lambda l: jnp.zeros((max_steps,) + l.shape, l.dtype), z0)
+
+
+def _buffer_set(buf: PyTree, i, val: PyTree) -> PyTree:
+    return jax.tree.map(lambda b, v: b.at[i].set(v), buf, val)
+
+
+def _buffer_get(buf: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda b: b[i], buf)
+
+
+def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def adaptive_while_solve(
+    tab: Tableau,
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: Tuple,
+    rtol: float,
+    atol: float,
+    cfg: ControllerConfig,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[PyTree, Checkpoints, SolveStats]:
+    """Integrate dz/dt = f(t, z, *args) through increasing times ``ts``.
+
+    Returns (ys, checkpoints, stats); ``ys`` is stacked over len(ts) with
+    ys[0] = z0.  Not reverse-differentiable (while_loop) — wrap in
+    custom_vjp (ACA / adjoint) or use only for inference.
+    """
+    n_eval = ts.shape[0]
+    tdt = ts.dtype
+    max_steps = cfg.max_steps
+    # trial budget: every accepted step costs >= 1 trial
+    max_total_trials = max_steps * cfg.max_trials
+
+    if h0 is None:
+        h0 = initial_stepsize(f, ts[0], z0, args, tab.order, rtol, atol)
+    h0 = jnp.asarray(h0, tdt)
+
+    ys = _empty_buffer(z0, n_eval)
+    ys = _buffer_set(ys, 0, z0)
+
+    ckpt_t = jnp.zeros((max_steps,), tdt)
+    ckpt_h = jnp.zeros((max_steps,), tdt)
+    ckpt_z = _empty_buffer(z0, max_steps)
+    ckpt_oi = jnp.full((max_steps,), -1, jnp.int32)
+
+    k0 = f(ts[0], z0, *args)
+    nfe0 = jnp.asarray(1 + 2, jnp.int32)  # hinit costs 2 evals when h0 is None
+
+    carry0 = dict(
+        t=ts[0], z=z0, k0=k0, h=h0,
+        prev_ratio=jnp.asarray(1.0, jnp.float32),
+        i=jnp.asarray(0, jnp.int32),            # accepted steps so far
+        eval_idx=jnp.asarray(1, jnp.int32),     # next ts[] to hit
+        trials=jnp.asarray(0, jnp.int32),
+        nfe=nfe0,
+        ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
+    )
+
+    tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+
+    def cond(c):
+        return (
+            (c["eval_idx"] < n_eval)
+            & (c["i"] < max_steps)
+            & (c["trials"] < max_total_trials)
+        )
+
+    def body(c):
+        t, z, h = c["t"], c["z"], c["h"]
+        t_target = ts[c["eval_idx"]]
+        # clamp trial step to land exactly on the next eval time
+        h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        h_use = jnp.clip(h, h_min, t_target - t)
+        res = rk_step(tab, f, t, z, h_use, args, k0=c["k0"])
+        nfe = c["nfe"] + (tab.stages - 1)
+
+        if tab.adaptive:
+            ratio = error_ratio(res.err, z, res.z_next, rtol, atol)
+            # forced-minimum steps are always accepted (cannot shrink further)
+            accept = (ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3))
+        else:
+            ratio = jnp.asarray(0.5, jnp.float32)
+            accept = jnp.asarray(True)
+
+        t_new = t + h_use
+        hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
+            jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # --- on accept: write trajectory checkpoint (t_i, h_i, z_i) -------
+        i = c["i"]
+        ckpt_t = c["ckpt_t"].at[i].set(jnp.where(accept, t, c["ckpt_t"][i]))
+        ckpt_h = c["ckpt_h"].at[i].set(jnp.where(accept, h_use, c["ckpt_h"][i]))
+        ckpt_z = jax.tree.map(
+            lambda b, v: b.at[i].set(jnp.where(accept, v, b[i])),
+            c["ckpt_z"], z)
+        oi_val = jnp.where(hit, c["eval_idx"], jnp.asarray(-1, jnp.int32))
+        ckpt_oi = c["ckpt_oi"].at[i].set(
+            jnp.where(accept, oi_val, c["ckpt_oi"][i]))
+
+        # --- on eval-time hit: record output ------------------------------
+        ys = jax.tree.map(
+            lambda b, v: b.at[c["eval_idx"]].set(
+                jnp.where(hit, v, b[c["eval_idx"]])),
+            c["ys"], res.z_next)
+
+        # --- stepsize control ---------------------------------------------
+        h_next = propose_stepsize(
+            cfg, h_use, ratio, c["prev_ratio"], tab.order)
+        # (the paper's Algo 1: shrink and retry on reject; grow on accept)
+        h_next = jnp.asarray(h_next, tdt)
+
+        # FSAL / first-stage reuse:
+        #  - reject: (t, z) unchanged -> k0 still valid, 0 extra evals
+        #  - accept + FSAL tableau: k0' = last stage of accepted step
+        #  - accept + non-FSAL: recompute k0' = f(t', z')
+        if tab.fsal:
+            k0_acc = res.k_last
+            nfe_acc = nfe
+        else:
+            k0_acc = f(t_new, res.z_next, *args)
+            nfe_acc = nfe + 1
+        k0_new = _where_tree(accept, k0_acc, c["k0"])
+        nfe = jnp.where(accept, nfe_acc, nfe)
+
+        return dict(
+            t=jnp.where(accept, t_new, t),
+            z=_where_tree(accept, res.z_next, z),
+            k0=k0_new,
+            h=h_next,
+            prev_ratio=jnp.where(
+                accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
+            i=i + accept.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            trials=c["trials"] + 1,
+            nfe=nfe,
+            ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
+            ckpt_oi=ckpt_oi,
+        )
+
+    c = jax.lax.while_loop(cond, body, carry0)
+
+    overflow = c["eval_idx"] < n_eval
+    ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
+                        out_idx=c["ckpt_oi"], n=c["i"])
+    stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
+                       overflow=overflow)
+    return c["ys"], ckpts, stats
+
+
+def make_fixed_grid(ts: jnp.ndarray, steps_per_interval: int) -> jnp.ndarray:
+    """Uniform sub-grid with ``steps_per_interval`` steps between each pair
+    of eval times.  Returns (n_intervals * steps,) array of (t, h) pairs as
+    two arrays (t_grid, h_grid)."""
+    t_lo = ts[:-1]
+    t_hi = ts[1:]
+    frac = jnp.arange(steps_per_interval) / steps_per_interval
+    # (n_intervals, steps)
+    t_grid = t_lo[:, None] + (t_hi - t_lo)[:, None] * frac[None, :]
+    h_grid = jnp.broadcast_to(
+        ((t_hi - t_lo) / steps_per_interval)[:, None], t_grid.shape)
+    return t_grid.reshape(-1), h_grid.reshape(-1)
+
+
+def fixed_grid_solve(
+    tab: Tableau,
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: Tuple,
+    steps_per_interval: int,
+) -> Tuple[PyTree, SolveStats]:
+    """Differentiable fixed-grid integration via ``lax.scan``.
+
+    Outputs at every ``ts``; ys[0] = z0.  Reverse-mode AD through the scan
+    is the naive method for fixed-step solvers.
+    """
+    t_grid, h_grid = make_fixed_grid(ts, steps_per_interval)
+    n_intervals = ts.shape[0] - 1
+
+    def step_fn(z, t_h):
+        t, h = t_h
+        z_next = rk_step(tab, f, t, z, h, args).z_next
+        return z_next, None
+
+    # scan per interval so we can emit outputs
+    def interval(z, idx):
+        t_seg = jax.lax.dynamic_slice_in_dim(
+            t_grid, idx * steps_per_interval, steps_per_interval)
+        h_seg = jax.lax.dynamic_slice_in_dim(
+            h_grid, idx * steps_per_interval, steps_per_interval)
+        z_end, _ = jax.lax.scan(step_fn, z, (t_seg, h_seg))
+        return z_end, z_end
+
+    _, ys_tail = jax.lax.scan(interval, z0, jnp.arange(n_intervals))
+    ys = jax.tree.map(
+        lambda z0l, tail: jnp.concatenate([z0l[None], tail], axis=0),
+        z0, ys_tail)
+
+    n_steps = n_intervals * steps_per_interval
+    stats = SolveStats(
+        n_steps=jnp.asarray(n_steps, jnp.int32),
+        n_trials=jnp.asarray(n_steps, jnp.int32),
+        nfe=jnp.asarray(n_steps * tab.stages, jnp.int32),
+        overflow=jnp.asarray(False),
+    )
+    return ys, stats

@@ -1,0 +1,174 @@
+"""The adjoint method of Chen et al. 2018 — the paper's primary baseline.
+
+Memory O(N_f): the forward trajectory is *forgotten*; the backward pass
+re-integrates the augmented system
+
+    d/dt [ z̄, λ, ḡ ] = [ f(t, z̄),  -(∂f/∂z)ᵀλ,  -(∂f/∂θ)ᵀλ ]
+
+in reverse time starting from the boundary condition (z(T), ∂J/∂z(T), 0)
+(paper Eqs. 6–8; we carry λ = +∂J/∂z so signs match autodiff convention).
+
+Because z̄(t) is a *fresh* IVP solved backwards, it drifts from the forward
+trajectory by the truncation-error term of Theorem 3.2
+(e_k = DΦ + (−1)^{p+1}(DΦ)^{-1} ≠ 0), producing the systematic gradient
+error that ACA eliminates.  This implementation exists so the paper's
+comparisons (Fig. 6, Table 1/2/4/5) are reproducible like-for-like.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .controller import ControllerConfig
+from .integrate import SolveStats, adaptive_while_solve, fixed_grid_solve
+from .tableaus import Tableau
+
+PyTree = Any
+
+
+def _as_tuple(args) -> Tuple:
+    return args if isinstance(args, tuple) else (args,)
+
+
+def _aug_dynamics(f: Callable):
+    """Reverse-time augmented dynamics in the substituted variable s = -t."""
+
+    def g(s, aug, args):
+        z, lam, _ = aug
+        t = -s
+        fz, vjp_fn = jax.vjp(lambda zz, aa: f(t, zz, *_as_tuple(aa)), z,
+                             args)
+        dz_cot, darg_cot = vjp_fn(lam)
+        # dA/dt = (f, -fᵀ_z λ, -fᵀ_θ λ);  dA/ds = -dA/dt
+        return (
+            jax.tree.map(jnp.negative, fz),
+            dz_cot,
+            darg_cot,
+        )
+
+    return g
+
+
+def odeint_adjoint(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    solver: Tableau,
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    cfg: Optional[ControllerConfig] = None,
+) -> Tuple[PyTree, SolveStats]:
+    """Adjoint-method odeint: O(N_f) memory, reverse-time numerical error."""
+    if cfg is None:
+        cfg = ControllerConfig()
+    if not solver.adaptive:
+        raise ValueError("adjoint baseline expects an adaptive tableau; "
+                         "fixed-grid adjoint == ANODE-style, see "
+                         "odeint_adjoint_fixed")
+
+    # forward buffers are not kept: capacity-1 checkpoint buffer (writes
+    # beyond slot 0 are dropped by XLA OOB-scatter semantics)
+    fwd_cfg = ControllerConfig(
+        safety=cfg.safety, min_factor=cfg.min_factor,
+        max_factor=cfg.max_factor, pi_coeff=cfg.pi_coeff,
+        max_steps=cfg.max_steps, max_trials=cfg.max_trials)
+
+    # ``ts`` is threaded explicitly (no closures over trace-time values)
+    @jax.custom_vjp
+    def solve(z0, args, ts):
+        ys, _, stats = adaptive_while_solve(
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg)
+        return ys, stats
+
+    def solve_fwd(z0, args, ts):
+        ys, _, stats = adaptive_while_solve(
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg)
+        # residuals: ONLY the eval-time states (z(T) et al.) — O(N_f) memory
+        return (ys, stats), (ys, args, ts)
+
+    def solve_bwd(res, cot):
+        ys, args, ts = res
+        g_ys, _ = cot
+        n_eval = ts.shape[0]
+        g_aug = _aug_dynamics(f)
+
+        zT = jax.tree.map(lambda y: y[-1], ys)
+        lam = jax.tree.map(lambda g: g[-1], g_ys)
+        gargs = jax.tree.map(jnp.zeros_like, args)
+        aug = (zT, lam, gargs)
+
+        # integrate segment [ts[k+1] -> ts[k]] in reverse; inject output
+        # cotangents at each eval time (static python loop: n_eval is static)
+        for k in range(n_eval - 2, -1, -1):
+            s_seg = jnp.stack([-ts[k + 1], -ts[k]])
+            ys_seg, _, _ = adaptive_while_solve(
+                solver,
+                lambda s, a, ar: g_aug(s, a, ar),
+                aug, s_seg, (args,), rtol, atol, cfg)
+            aug = jax.tree.map(lambda y: y[-1], ys_seg)
+            zk, lam, gargs = aug
+            lam = jax.tree.map(lambda l, g: l + g[k], lam, g_ys)
+            aug = (zk, lam, gargs)
+
+        _, lam, gargs = aug
+        return lam, gargs, jnp.zeros_like(ts)
+
+    solve.defvjp(solve_fwd, solve_bwd)
+    return solve(z0, args, ts)
+
+
+def odeint_adjoint_fixed(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    solver: Tableau,
+    steps_per_interval: int = 8,
+) -> Tuple[PyTree, SolveStats]:
+    """Fixed-grid adjoint (ANODE-family baseline): reverse-integrate the
+    augmented system on the same uniform grid, O(N_f) memory, but the
+    reverse z̄ trajectory still drifts from the forward one."""
+
+    @jax.custom_vjp
+    def solve(z0, args, ts):
+        return fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
+                                steps_per_interval)
+
+    def solve_fwd(z0, args, ts):
+        out = fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
+                               steps_per_interval)
+        ys, stats = out
+        return out, (ys, args, ts)
+
+    def solve_bwd(res, cot):
+        ys, args, ts = res
+        g_ys, _ = cot
+        n_eval = ts.shape[0]
+        g_aug = _aug_dynamics(f)
+
+        zT = jax.tree.map(lambda y: y[-1], ys)
+        lam = jax.tree.map(lambda g: g[-1], g_ys)
+        gargs = jax.tree.map(jnp.zeros_like, args)
+        aug = (zT, lam, gargs)
+
+        for k in range(n_eval - 2, -1, -1):
+            s_seg = jnp.stack([-ts[k + 1], -ts[k]])
+            ys_seg, _ = fixed_grid_solve(
+                solver, lambda s, a, ar: g_aug(s, a, ar),
+                aug, s_seg, (args,), steps_per_interval)
+            aug = jax.tree.map(lambda y: y[-1], ys_seg)
+            zk, lam, gargs = aug
+            lam = jax.tree.map(lambda l, g: l + g[k], lam, g_ys)
+            aug = (zk, lam, gargs)
+
+        _, lam, gargs = aug
+        return lam, gargs, jnp.zeros_like(ts)
+
+    solve.defvjp(solve_fwd, solve_bwd)
+    return solve(z0, args, ts)

@@ -1,0 +1,118 @@
+"""Generic explicit Runge-Kutta step  ψ_h(t, z)  over arbitrary pytrees.
+
+One ``rk_step`` evaluates all stages of a tableau and returns the advanced
+state plus (for embedded pairs) the local error estimate.  This is the ψ of
+the paper's Algorithm 1; every gradient method (naive / adjoint / ACA) calls
+the same stepper so forward trajectories are bit-identical across methods.
+
+The stage accumulation  z + h·Σ a_ij k_j  is the memory-bound hot loop on
+TPU; ``repro.kernels.rk_stage`` provides a fused Pallas kernel for the flat
+(array) fast path, which this module dispatches to when enabled.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .tableaus import Tableau
+
+PyTree = Any
+VecField = Callable[..., PyTree]  # f(t, z, *args) -> dz/dt
+
+
+def _tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """y + alpha * x elementwise over pytrees, preserving y's dtype
+    (an f32 stepsize scalar must not upcast a bf16 model state)."""
+    return jax.tree.map(
+        lambda xi, yi: yi + (alpha * xi).astype(yi.dtype), x, y)
+
+
+def _weighted_sum(ks: Tuple[PyTree, ...], ws) -> PyTree:
+    """Σ_i ws[i] * ks[i] over pytrees, skipping exact-zero weights."""
+    acc = None
+    for w, k in zip(ws, ks):
+        if isinstance(w, float) and w == 0.0:
+            continue
+        term = jax.tree.map(lambda ki: w * ki, k)
+        acc = term if acc is None else jax.tree.map(jnp.add, acc, term)
+    if acc is None:
+        acc = jax.tree.map(jnp.zeros_like, ks[0])
+    return acc
+
+
+class StepResult(NamedTuple):
+    z_next: PyTree
+    err: Optional[PyTree]  # local error estimate (None for fixed-step)
+    k_last: PyTree         # last stage derivative (FSAL reuse)
+
+
+def rk_step(
+    tab: Tableau,
+    f: VecField,
+    t,
+    z: PyTree,
+    h,
+    args: Tuple = (),
+    k0: Optional[PyTree] = None,
+) -> StepResult:
+    """One explicit RK step of ``tab`` from (t, z) with stepsize h.
+
+    ``k0`` optionally supplies the first stage derivative (FSAL).
+    Returns z_{n+1}, the embedded error estimate (h·Σ b_err_i k_i) and the
+    final stage derivative for FSAL chaining.
+    """
+    ks = []
+    for i in range(tab.stages):
+        if i == 0:
+            ki = k0 if k0 is not None else f(t, z, *args)
+        else:
+            zi = z
+            incr = _weighted_sum(tuple(ks), tab.a[i])
+            zi = _tree_axpy(h, incr, z)
+            ki = f(t + tab.c[i] * h, zi, *args)
+        ks.append(ki)
+    ks = tuple(ks)
+
+    z_next = _tree_axpy(h, _weighted_sum(ks, tab.b), z)
+
+    err = None
+    if tab.b_err is not None:
+        err = jax.tree.map(lambda e: h * e, _weighted_sum(ks, tab.b_err))
+
+    if tab.fsal:
+        k_last = ks[-1]
+    else:
+        k_last = ks[0]
+    return StepResult(z_next=z_next, err=err, k_last=k_last)
+
+
+def error_ratio(err: PyTree, z0: PyTree, z1: PyTree, rtol: float,
+                atol: float):
+    """RMS norm of err scaled by atol + rtol*max(|z0|,|z1|) (Hairer I.4).
+
+    Returns a scalar; an accepted step has ratio <= 1.
+    """
+    def _scaled_sq(e, a, b):
+        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        r = (e / scale).astype(jnp.float32)
+        return jnp.sum(r * r), r.size
+
+    leaves_sq, sizes = zip(*(
+        _scaled_sq(e, a, b)
+        for e, a, b in zip(jax.tree.leaves(err), jax.tree.leaves(z0),
+                           jax.tree.leaves(z1))
+    ))
+    total = sum(leaves_sq)
+    n = sum(sizes)
+    return jnp.sqrt(total / n)
+
+
+def fixed_step_fn(tab: Tableau, f: VecField) -> Callable:
+    """Returns step(t, z, h, args) -> z_next for fixed-grid integration."""
+    def step(t, z, h, args=()):
+        return rk_step(tab, f, t, z, h, args).z_next
+    return step

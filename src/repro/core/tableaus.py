@@ -1,0 +1,209 @@
+"""Butcher tableaus for explicit (embedded) Runge-Kutta solvers.
+
+The paper (Sec. 4.2, Table 2) uses fixed-stepsize solvers Euler / RK2 / RK4
+and adaptive embedded pairs HeunEuler 1(2), Bogacki-Shampine RK23 2(3) and
+Dormand-Prince RK45 4(5).  Every solver is expressed as one immutable
+tableau consumed by the generic stepper in ``stepper.py``.
+
+A tableau of an ``s``-stage method holds
+
+  * ``a``  — (s, s) strictly-lower-triangular stage coefficients,
+  * ``b``  — (s,) solution weights (order ``order``),
+  * ``b_err`` — (s,) difference b - b_hat against the embedded lower-order
+    solution; ``None`` for fixed-step methods (no error estimate),
+  * ``c``  — (s,) stage times,
+  * ``order`` — the order p used by the stepsize controller exponent,
+  * ``fsal`` — first-same-as-last: stage 0 of the next step equals the last
+    stage of the accepted step (Dopri5, BS23), saving one f-evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Tableau",
+    "EULER",
+    "MIDPOINT",
+    "HEUN2",
+    "RK4",
+    "HEUN_EULER",
+    "BOGACKI_SHAMPINE",
+    "DOPRI5",
+    "get_tableau",
+    "FIXED_SOLVERS",
+    "ADAPTIVE_SOLVERS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Tableau:
+    name: str
+    a: Tuple[Tuple[float, ...], ...]
+    b: Tuple[float, ...]
+    c: Tuple[float, ...]
+    order: int
+    b_err: Optional[Tuple[float, ...]] = None
+    fsal: bool = False
+
+    @property
+    def stages(self) -> int:
+        return len(self.b)
+
+    @property
+    def adaptive(self) -> bool:
+        return self.b_err is not None
+
+    def a_matrix(self) -> np.ndarray:
+        s = self.stages
+        a = np.zeros((s, s), dtype=np.float64)
+        for i, row in enumerate(self.a):
+            a[i, : len(row)] = row
+        return a
+
+    def validate(self) -> None:
+        """Consistency checks: row-sum = c, sum(b) = 1, explicitness."""
+        a = self.a_matrix()
+        s = self.stages
+        assert a.shape == (s, s)
+        # explicit: strictly lower triangular
+        assert np.allclose(np.triu(a), 0.0), f"{self.name}: tableau not explicit"
+        assert np.allclose(a.sum(axis=1), np.asarray(self.c), atol=1e-12), (
+            f"{self.name}: row sums != c"
+        )
+        assert abs(sum(self.b) - 1.0) < 1e-12, f"{self.name}: sum(b) != 1"
+        if self.b_err is not None:
+            # embedded error weights must sum to zero (b and b_hat both sum to 1)
+            assert abs(sum(self.b_err)) < 1e-12, f"{self.name}: sum(b_err) != 0"
+
+
+# ----------------------------------------------------------------------------
+# Fixed-step methods
+# ----------------------------------------------------------------------------
+
+EULER = Tableau(
+    name="euler",
+    a=((),),
+    b=(1.0,),
+    c=(0.0,),
+    order=1,
+)
+
+MIDPOINT = Tableau(
+    name="midpoint",
+    a=((), (0.5,)),
+    b=(0.0, 1.0),
+    c=(0.0, 0.5),
+    order=2,
+)
+
+# Explicit trapezoid / Heun's 2nd-order method — this is the paper's "RK2".
+HEUN2 = Tableau(
+    name="rk2",
+    a=((), (1.0,)),
+    b=(0.5, 0.5),
+    c=(0.0, 1.0),
+    order=2,
+)
+
+RK4 = Tableau(
+    name="rk4",
+    a=((), (0.5,), (0.0, 0.5), (0.0, 0.0, 1.0)),
+    b=(1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0),
+    c=(0.0, 0.5, 0.5, 1.0),
+    order=4,
+)
+
+# ----------------------------------------------------------------------------
+# Adaptive embedded pairs
+# ----------------------------------------------------------------------------
+
+# Heun-Euler 1(2): advance with Heun (order 2), error against Euler (order 1).
+# The paper trains NODE18 with this solver (Appendix D, rtol=atol=1e-2).
+HEUN_EULER = Tableau(
+    name="heun_euler",
+    a=((), (1.0,)),
+    b=(0.5, 0.5),
+    b_err=(0.5 - 1.0, 0.5 - 0.0),  # b - b_hat with b_hat = (1, 0) (Euler)
+    c=(0.0, 1.0),
+    order=2,
+)
+
+# Bogacki-Shampine 2(3) — the paper's "RK23". FSAL.
+BOGACKI_SHAMPINE = Tableau(
+    name="bosh3",
+    a=(
+        (),
+        (0.5,),
+        (0.0, 0.75),
+        (2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0),
+    ),
+    b=(2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0),
+    b_err=(
+        2.0 / 9.0 - 7.0 / 24.0,
+        1.0 / 3.0 - 1.0 / 4.0,
+        4.0 / 9.0 - 1.0 / 3.0,
+        0.0 - 1.0 / 8.0,
+    ),
+    c=(0.0, 0.5, 0.75, 1.0),
+    order=3,
+    fsal=True,
+)
+
+# Dormand-Prince 4(5) — the paper's "RK45" / "Dopri5". FSAL.
+DOPRI5 = Tableau(
+    name="dopri5",
+    a=(
+        (),
+        (1.0 / 5.0,),
+        (3.0 / 40.0, 9.0 / 40.0),
+        (44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0),
+        (19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0),
+        (9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0,
+         -5103.0 / 18656.0),
+        (35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0,
+         11.0 / 84.0),
+    ),
+    b=(35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0,
+       11.0 / 84.0, 0.0),
+    b_err=(
+        35.0 / 384.0 - 5179.0 / 57600.0,
+        0.0,
+        500.0 / 1113.0 - 7571.0 / 16695.0,
+        125.0 / 192.0 - 393.0 / 640.0,
+        -2187.0 / 6784.0 + 92097.0 / 339200.0,
+        11.0 / 84.0 - 187.0 / 2100.0,
+        0.0 - 1.0 / 40.0,
+    ),
+    c=(0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0),
+    order=5,
+    fsal=True,
+)
+
+
+_REGISTRY = {
+    t.name: t
+    for t in (EULER, MIDPOINT, HEUN2, RK4, HEUN_EULER, BOGACKI_SHAMPINE, DOPRI5)
+}
+# aliases matching the paper's naming
+_REGISTRY["rk23"] = BOGACKI_SHAMPINE
+_REGISTRY["rk45"] = DOPRI5
+_REGISTRY["heuneuler"] = HEUN_EULER
+
+FIXED_SOLVERS = ("euler", "midpoint", "rk2", "rk4")
+ADAPTIVE_SOLVERS = ("heun_euler", "bosh3", "dopri5")
+
+
+def get_tableau(name: str) -> Tableau:
+    key = name.lower().replace("-", "_")
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown solver {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+for _t in (EULER, MIDPOINT, HEUN2, RK4, HEUN_EULER, BOGACKI_SHAMPINE, DOPRI5):
+    _t.validate()

@@ -1,0 +1,16 @@
+"""repro.data — deterministic synthetic data pipelines.
+
+All pipelines are *step-indexed*: batch(step) is a pure function of
+(seed, step), so a restarted job resumes mid-epoch without data-state
+checkpointing — the fault-tolerance contract the train loop relies on.
+"""
+
+from .synthetic import TokenPipeline, spiral_classification
+from .timeseries import irregular_series_batch
+from .threebody import simulate_three_body, three_body_rhs
+
+__all__ = [
+    "TokenPipeline", "spiral_classification",
+    "irregular_series_batch",
+    "simulate_three_body", "three_body_rhs",
+]

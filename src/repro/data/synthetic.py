@@ -1,0 +1,85 @@
+"""Synthetic token / classification pipelines (offline substitutes).
+
+``TokenPipeline`` generates language-model batches with Zipfian token
+statistics and a deterministic (seed, step) -> batch mapping; each host
+materializes only its shard of the global batch (``host_slice``), which
+is how the real-cluster input pipeline stays O(per-host).
+
+``spiral_classification`` is the image-classification stand-in for the
+paper's CIFAR experiments (same task structure: k-class classification
+of points no linear model separates; NODE vs discrete-net comparisons
+are preserved).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def batch(self, step: int,
+              host_slice: Optional[Tuple[int, int]] = None
+              ) -> Dict[str, jnp.ndarray]:
+        """Batch for ``step``; host_slice=(host_idx, n_hosts) selects the
+        host-local rows of the global batch."""
+        b = self.global_batch
+        lo, hi = 0, b
+        if host_slice is not None:
+            idx, n = host_slice
+            per = b // n
+            lo, hi = idx * per, (idx + 1) * per
+        # per-row seeding so a host materializes ONLY its rows yet gets
+        # exactly the global batch's rows lo..hi
+        rows = []
+        for r in range(lo, hi):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, r]))
+            rows.append(rng.zipf(self.zipf_a, size=self.seq_len + 1))
+        z = np.stack(rows)
+        toks = np.minimum(z - 1, self.vocab - 1).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+            "mask": jnp.ones((hi - lo, self.seq_len), jnp.float32),
+        }
+
+
+def spiral_classification(n: int, n_classes: int = 3, noise: float = 0.15,
+                          dim: int = 16, seed: int = 0,
+                          lift_seed: int = 0
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k-arm spiral classification, lifted to ``dim`` features.
+
+    ``seed`` draws the points; ``lift_seed`` draws the (fixed) feature
+    lift — train/test splits must share it.  Returns (x, y)."""
+    rng = np.random.default_rng(seed)
+    per = n // n_classes
+    xs, ys = [], []
+    for c in range(n_classes):
+        t = np.linspace(0.3, 2.5 * np.pi, per)
+        r = t / (2.5 * np.pi)
+        ang = t + 2 * np.pi * c / n_classes
+        pts = np.stack([r * np.cos(ang), r * np.sin(ang)], 1)
+        pts += rng.normal(scale=noise * r[:, None], size=pts.shape)
+        xs.append(pts)
+        ys.append(np.full(per, c))
+    x2 = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    # random fixed lift to `dim` features (keeps the task, adds width)
+    lift_rng = np.random.default_rng(lift_seed)
+    lift = lift_rng.normal(size=(2, dim)).astype(np.float32) / np.sqrt(2)
+    x = x2 @ lift
+    perm = rng.permutation(len(y))
+    return jnp.asarray(x[perm]), jnp.asarray(y[perm])

@@ -1,0 +1,21 @@
+"""repro.distributed — mesh-aware sharding rules and collective helpers."""
+
+from .sharding import (
+    AxisRules,
+    DEFAULT_TRAIN_RULES,
+    DEFAULT_SERVE_RULES,
+    logical_to_spec,
+    shard,
+    make_named_sharding,
+    spec_tree_for,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_TRAIN_RULES",
+    "DEFAULT_SERVE_RULES",
+    "logical_to_spec",
+    "shard",
+    "make_named_sharding",
+    "spec_tree_for",
+]

@@ -1,0 +1,18 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot spots.
+
+Each kernel module provides ``<op>_pallas(..., interpret=...)`` built on
+``pl.pallas_call`` with explicit VMEM BlockSpecs; ``ops.py`` is the jit'd
+dispatch layer (kernel on TPU, interpret-mode kernel or jnp reference on
+CPU); ``ref.py`` holds the pure-jnp oracles the tests sweep against.
+
+Kernels:
+  rk_stage        — fused RK stage combine + embedded error (ACA hot loop)
+  rmsnorm         — fused RMSNorm (fp32 statistics, bf16 IO)
+  flash_attention — causal (windowed) GQA flash attention, block-skipping
+  ssd_scan        — Mamba-2 SSD chunk scan with VMEM state carry
+  rg_lru          — RG-LRU linear recurrence, chunked with VMEM state carry
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,61 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+On a TPU backend the compiled kernels run natively; elsewhere (this
+container) ``interpret=True`` executes the kernel body in Python on CPU
+— the mode the test suite validates against the ``ref.py`` oracles.
+``set_interpret(True)`` (or the REPRO_PALLAS_INTERPRET env var) forces
+interpret mode explicitly.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .rg_lru import rg_lru_pallas
+from .rk_stage import rk_stage_combine_pallas
+from .rmsnorm import rmsnorm_pallas
+from .ssd_scan import ssd_scan_pallas
+
+_FORCE_INTERPRET: Optional[bool] = None
+
+
+def set_interpret(value: Optional[bool]) -> None:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def rk_stage_combine(z, k, h, b, e=None, **kw):
+    return rk_stage_combine_pallas(z, k, h, b, e,
+                                   interpret=_interpret(), **kw)
+
+
+def rmsnorm(x, w, eps: float = 1e-6, **kw):
+    return rmsnorm_pallas(x, w, eps=eps, interpret=_interpret(), **kw)
+
+
+def flash_attention(q, k, v, *, window: int = 0, scale=None, **kw):
+    return flash_attention_pallas(q, k, v, window=window, scale=scale,
+                                  interpret=_interpret(), **kw)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, chunk: int, **kw):
+    return ssd_scan_pallas(x, dt, a, b_mat, c_mat, chunk,
+                           interpret=_interpret(), **kw)
+
+
+def rg_lru(log_a, b, **kw):
+    return rg_lru_pallas(log_a, b, interpret=_interpret(), **kw)

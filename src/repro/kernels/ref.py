@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the test targets).
+
+These are the *definitions* of correct behaviour; the kernel tests sweep
+shapes/dtypes and assert_allclose against them.  Where the model code
+already contains the reference computation it is reused directly so the
+kernel, the model fallback and the oracle cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+from repro.models.common import rmsnorm as _rmsnorm_model
+from repro.models.mamba2 import ssd_chunked as _ssd_chunked_model
+
+
+def rk_stage_combine_ref(z, k, h, b, e) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """z (N,), k (s, N), h scalar -> (z + h Σ b_i k_i,  h Σ e_i k_i)."""
+    bw = jnp.asarray(b, jnp.float32)[:, None]
+    kf = k.astype(jnp.float32)
+    zn = z.astype(jnp.float32) + h * (bw * kf).sum(0)
+    if e is None:
+        err = jnp.zeros_like(zn)
+    else:
+        ew = jnp.asarray(e, jnp.float32)[:, None]
+        err = h * (ew * kf).sum(0)
+    return zn.astype(z.dtype), err
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6) -> jnp.ndarray:
+    return _rmsnorm_model(x, w, eps)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B,H,S,dh), k/v (B,Hkv,S,dh) -> (B,H,S,dh), causal (+window)."""
+    h, hkv = q.shape[1], k.shape[1]
+    ke = jnp.repeat(k, h // hkv, axis=1)
+    ve = jnp.repeat(v, h // hkv, axis=1)
+    # full_attention uses (B,S,H,dh) layout
+    out = full_attention(q.transpose(0, 2, 1, 3), ke.transpose(0, 2, 1, 3),
+                         ve.transpose(0, 2, 1, 3), window=window,
+                         scale=scale)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, chunk) -> jnp.ndarray:
+    """Shares the model's chunked SSD implementation (y only)."""
+    y, _ = _ssd_chunked_model(x, dt, a, b_mat, c_mat, chunk)
+    return y
+
+
+def ssd_scan_sequential_ref(x, dt, a, b_mat, c_mat) -> jnp.ndarray:
+    """Independent O(S) sequential SSM — validates the chunked algebra."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt * a[None])                     # (B,H)
+        hstate = hstate * da[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhpn", bt, dtt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                   bf.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)                            # (B,S,H,P)
+
+
+def rg_lru_ref(log_a, b) -> jnp.ndarray:
+    """h_t = exp(log_a_t) h_{t-1} + b_t via associative scan (fp32)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bf), axis=1)
+    return h

@@ -1,0 +1,1 @@
+"""repro.launch — production mesh, multi-pod dry-run, roofline, drivers."""

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
+    os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count at first init).  512 host-platform placeholder devices let
+``jax.make_mesh`` build the production meshes on this CPU-only box; the
+cells are lowered from ShapeDtypeStructs — no full-size array is ever
+allocated.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_72b \
+        --shape train_4k [--multi-pod] [--node]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell writes results/dryrun/<mesh>/<arch>__<shape>.json with
+memory_analysis, cost_analysis and the §Roofline terms.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_plan
+from repro.core.node_block import NodeConfig
+from repro.distributed.sharding import (DEFAULT_TRAIN_RULES, fit_specs,
+                                         logical_to_spec)
+from repro.models import RunConfig, build_model
+from repro.models.frontends import frontend_batch_abstract
+from repro.optim import adamw, cosine_warmup
+from repro.optim.grad_utils import CompressionState
+from repro.train.loop import TrainLoopConfig, build_train_step
+from repro.train.state import abstract_train_state, train_state_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _ns(mesh, spec_tree, abstract_tree=None):
+    if abstract_tree is not None:
+        # jit in_shardings demand divisibility; drop axes that don't fit
+        spec_tree = fit_specs(abstract_tree, spec_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_abstract(cfg, kind: str, seq: int, gb: int):
+    if cfg.frontend != "none" and kind != "decode":
+        b = frontend_batch_abstract(cfg, gb, seq)
+        if kind == "prefill":
+            b = {"embeds": b["embeds"]}
+        return b
+    if kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((gb, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((gb, seq), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((gb, seq), jnp.float32),
+        }
+    if kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((gb, seq), jnp.int32)}
+    # decode: one new token (frontend archs feed a 1-step embedding)
+    if cfg.frontend != "none":
+        return {"embeds": jax.ShapeDtypeStruct((gb, 1, cfg.d_model),
+                                               jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((gb, 1), jnp.int32)}
+
+
+def _batch_specs(cfg, kind: str, rules, mesh, batch):
+    out = {}
+    for k in batch:
+        if k == "embeds":
+            out[k] = logical_to_spec(("batch", "seq", "embed_act"),
+                                     rules, mesh)
+        else:
+            out[k] = logical_to_spec(("batch", "seq"), rules, mesh)
+    return out
+
+
+def build_cell(arch: str, shape: str, mesh, *, node: bool = False,
+               rules=None, remat: str = "block",
+               microbatches: int = 1, node_steps: int = 2):
+    """Returns (jitted_fn, abstract_args) for the cell, or None if skipped."""
+    plan = shape_plan(arch, shape)
+    if plan is None:
+        return None
+    seq, gb, kind = plan
+    cfg = get_config(arch)
+    rules = rules or DEFAULT_TRAIN_RULES
+    node_cfg = NodeConfig(enabled=node, regime="fixed", grad_method="aca",
+                          solver="rk2", steps_per_interval=node_steps) \
+        if node else NodeConfig()
+    rcfg = RunConfig(
+        mesh=mesh, rules=rules,
+        compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.float32 if kind == "train" else jnp.bfloat16,
+        remat=remat if kind == "train" else "none",
+        node=node_cfg,
+        max_seq=seq,
+    )
+    model = build_model(cfg, rcfg)
+
+    batch = _batch_abstract(cfg, kind, seq, gb)
+    batch_sh = _ns(mesh, _batch_specs(cfg, kind, rules, mesh, batch),
+                   batch)
+    param_sh = _ns(mesh, model.specs(mesh), model.abstract())
+
+    if kind == "train":
+        opt = adamw(cosine_warmup(3e-4, 100, 10000), weight_decay=0.1)
+        lcfg = TrainLoopConfig(microbatches=microbatches, clip_norm=1.0,
+                               compression="none")
+        step = build_train_step(model, opt, lcfg)
+        state = abstract_train_state(model, opt)
+        state_sh = _ns(mesh, train_state_specs(model, opt, mesh), state)
+        comp = CompressionState(error=())
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh, None),
+                     donate_argnums=(0,))
+        args = (state, batch, comp)
+    elif kind == "prefill":
+        fn = jax.jit(model.prefill, in_shardings=(param_sh, batch_sh))
+        args = (model.abstract(), batch)
+    else:  # decode
+        caches = model.abstract_caches(gb, seq)
+        cache_sh = _ns(mesh, model.cache_specs(gb, seq, mesh=mesh), caches)
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(param_sh, batch_sh, cache_sh,
+                                   NamedSharding(mesh, P())),
+                     donate_argnums=(2,))
+        args = (model.abstract(), batch,
+                caches, jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args, cfg, (seq, gb, kind)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             node: bool = False, rules=None, remat: str = "block",
+             microbatches: int = 1, node_steps: int = 2,
+             save: bool = True, tag: str = "") -> Optional[Dict[str, Any]]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = build_cell(arch, shape, mesh, node=node, rules=rules,
+                      remat=remat, microbatches=microbatches,
+                      node_steps=node_steps)
+    if cell is None:
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": "full-attention arch skips long_500k"}
+    fn, args, cfg, (seq, gb, kind) = cell
+
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    roof = rl.analyze(compiled, cfg, kind, seq, gb, n_dev, hlo_text=hlo)
+
+    result = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "node_mode": node,
+        "seq": seq, "global_batch": gb,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_info,
+        "roofline": roof.to_dict(),
+        "hlo_instr_count": hlo.count("\n"),
+    }
+    if save:
+        mesh_name = result["mesh"]
+        d = os.path.join(RESULTS_DIR, mesh_name)
+        os.makedirs(d, exist_ok=True)
+        suffix = f"__{tag}" if tag else ("__node" if node else "")
+        with open(os.path.join(d, f"{arch}__{shape}{suffix}.json"),
+                  "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--node", action="store_true",
+                    help="continuous-depth (NODE/ACA) train mode")
+    ap.add_argument("--remat", default="block", choices=["none", "block"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--node-steps", type=int, default=2)
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=axis sharding-rule override, e.g. "
+                         "res_seq=model or embed=none (repeatable)")
+    args = ap.parse_args()
+
+    rules = DEFAULT_TRAIN_RULES
+    for ov in args.override:
+        k, v = ov.split("=")
+        val = None if v.lower() in ("none", "null") else \
+            (tuple(v.split("+")) if "+" in v else v)
+        rules = rules.override(**{k: val})
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            if arch == "node18_cifar":
+                continue        # covered by the dedicated --node rows
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in cells:
+        try:
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         node=args.node, remat=args.remat, rules=rules,
+                         microbatches=args.microbatches,
+                         node_steps=args.node_steps, tag=args.tag)
+            if r.get("skipped"):
+                print(f"[skip] {arch} × {shape}: {r['reason']}")
+                continue
+            roof = r["roofline"]
+            print(f"[ok]  {arch} × {shape} ({r['mesh']}): "
+                  f"compile {r['compile_s']}s  "
+                  f"t_comp={roof['t_compute']:.3e}s "
+                  f"t_mem={roof['t_memory']:.3e}s "
+                  f"t_coll={roof['t_collective']:.3e}s "
+                  f"dom={roof['dominant']} "
+                  f"frac={roof['roofline_fraction']:.2f}")
+        except Exception:
+            n_fail += 1
+            print(f"[FAIL] {arch} × {shape}")
+            traceback.print_exc()
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,366 @@
+"""HLO-text cost model: trip-count-aware FLOPs / bytes / collectives.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 94 layers contributes its body a single time, so the
+aggregate is ~L× too small (verified empirically on a scanned matmul).
+The dry-run's roofline therefore walks the optimized HLO **text**:
+
+  * per computation, a symbol table maps every instruction name to its
+    result shape (operands are referenced by name in optimized HLO);
+  * ``while`` bodies (+conditions) are scaled by the **trip count**,
+    recovered from the loop bound constant in the condition computation
+    (XLA counted-loop canonical form); dynamic-trip loops fall back to
+    1 and are counted in ``dynamic_whiles``;
+  * **flops**: every ``dot`` contributes 2 · |result| · Π(lhs
+    contracting dims); fusion-internal dots count (they hit the MXU);
+  * **bytes**: per materializing instruction, result + resolved operand
+    bytes; fusion bodies are skipped (internal values stay in
+    registers/VMEM) — the fusion call's own line carries its traffic;
+  * **collectives**: moved bytes = ring-factor × max(result, operands)
+    (all-reduce 2×, gather/scatter/a2a/permute 1×), trip-scaled.
+
+The per-computation ``breakdown`` is the profiler the §Perf loop reads:
+it names which loop body owns the dominant term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_TYPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(r"(body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                "reduce-scatter": 1.0, "all-to-all": 1.0,
+                "collective-permute": 1.0}
+
+# ops that move no HBM bytes of their own (control flow passes buffers
+# by reference — the body's instructions already carry the traffic)
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "custom-call", "while", "conditional",
+             "call"}
+
+# algorithm-intrinsic traffic: what even a perfectly-fusing compiler
+# must move.  The CPU backend fuses far less than the TPU backend, so
+# raw per-op bytes ("bytes_all") overstate TPU HBM traffic; `bytes_min`
+# counts only these ops (incl. fusions' own in/out, which model TPU
+# fusion-group traffic).  Truth on TPU lies in [bytes_min, bytes_all].
+_ESSENTIAL_OPS = {"dot", "convolution", "fusion", "reduce",
+                  "reduce-window", "scatter", "gather", "sort",
+                  "dynamic-slice", "dynamic-update-slice",
+                  "select-and-scatter", "cholesky", "triangular-solve",
+                  "all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute"}
+
+
+def _dims_of(type_str_dims: str) -> List[int]:
+    return [int(d) for d in type_str_dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_dims: List[List[int]]       # list of typed shapes (tuples)
+    result_bytes: int
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_min: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    children: List[Tuple[str, str, Optional[str]]] = dataclasses.field(
+        default_factory=list)
+    trip_hint: Optional[int] = None
+
+
+def _parse_line(line: str) -> Optional[_Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    # strip metadata (shapes can appear inside op_name strings)
+    rhs_clean = rhs.split(", metadata=")[0]
+    om = _OPCODE_RE.search(rhs_clean)
+    if not om:
+        return None
+    opcode = om.group(1)
+    type_part = rhs_clean[:om.start()]
+    dims, nbytes = [], 0
+    for dt, dd in _TYPE_RE.findall(type_part):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        d = _dims_of(dd)
+        dims.append(d)
+        n = 1
+        for x in d:
+            n *= x
+        nbytes += n * nb
+    # operand names: inside the opcode parens (up to the attr list)
+    paren = rhs_clean[om.end():]
+    depth, end = 1, len(paren)
+    for i, ch in enumerate(paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = _OPERAND_RE.findall(paren[:end])
+    return _Instr(name=name, opcode=opcode, result_dims=dims,
+                  result_bytes=nbytes, operands=operands, line=rhs_clean)
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, CompCost], str,
+                                           Dict[str, Dict[str, _Instr]]]:
+    comps: Dict[str, CompCost] = {}
+    tables: Dict[str, Dict[str, _Instr]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if line.endswith("{") and "=" not in line.split("(")[0]:
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = hdr.group(2)
+                comps[cur] = CompCost()
+                tables[cur] = {}
+                if hdr.group(1):
+                    entry = cur
+            continue
+        if cur is None:
+            continue
+        ins = _parse_line(line)
+        if ins is None:
+            continue
+        comps_c = comps[cur]
+        tables[cur][ins.name] = ins
+
+        # call-graph edges
+        attrs = dict(_CALL_ATTR_RE.findall(ins.line))
+        if "body" in attrs:
+            comps_c.children.append(
+                ("while", attrs["body"], attrs.get("condition")))
+        elif "to_apply" in attrs and ins.opcode not in (
+                "reduce", "reduce-window", "sort", "scatter", "map",
+                "select-and-scatter", "all-reduce", "reduce-scatter"):
+            comps_c.children.append(("apply", attrs["to_apply"], None))
+        elif "calls" in attrs:
+            comps_c.children.append(("fusion", attrs["calls"], None))
+        bm = _BRANCHES_RE.search(ins.line)
+        if bm:
+            for nm in bm.group(1).split(","):
+                comps_c.children.append(
+                    ("branch", nm.strip().lstrip("%"), None))
+
+        # trip-count hint
+        tm = _TRIP_RE.search(line)
+        if tm:
+            val = int(tm.group(1))
+            if comps_c.trip_hint is None or val > comps_c.trip_hint:
+                comps_c.trip_hint = val
+    return comps, entry, tables
+
+
+def _operand_bytes(ins: _Instr, table: Dict[str, _Instr]) -> int:
+    total = 0
+    for op in ins.operands:
+        t = table.get(op)
+        if t is not None:
+            total += t.result_bytes
+    return total
+
+
+def _slice_adjust(table: Dict[str, _Instr]) -> int:
+    """Bytes over-charged to a fusion whose parameters are consumed only
+    through dynamic-slice (the fusion reads slices, not whole buffers).
+
+    Returns Σ over such params of (param_bytes − Σ 2·slice_bytes)."""
+    uses: Dict[str, List[_Instr]] = {}
+    for ins in table.values():
+        for op in ins.operands:
+            uses.setdefault(op, []).append(ins)
+    adjust = 0
+    for name, ins in table.items():
+        if ins.opcode != "parameter":
+            continue
+        consumers = uses.get(name, [])
+        if not consumers:
+            continue
+        if all(c.opcode == "dynamic-slice" and c.operands
+               and c.operands[0] == name for c in consumers):
+            sliced = sum(2 * c.result_bytes for c in consumers)
+            if ins.result_bytes > sliced:
+                adjust += ins.result_bytes - sliced
+    return adjust
+
+
+def _accumulate(comp: CompCost, table: Dict[str, _Instr],
+                adjust: Dict[str, int]) -> None:
+    for ins in table.values():
+        # flops from dots (counted even inside fusions — MXU work)
+        if ins.opcode == "dot":
+            cm = _DOT_CONTRACT_RE.search(ins.line)
+            result_elems = 0
+            if ins.result_dims:
+                n = 1
+                for x in ins.result_dims[0]:
+                    n *= x
+                result_elems = n
+            contract = 1
+            if cm and ins.operands:
+                lhs = table.get(ins.operands[0])
+                if lhs is not None and lhs.result_dims:
+                    ldims = lhs.result_dims[0]
+                    for ci in (int(x) for x in cm.group(1).split(",")
+                               if x):
+                        if ci < len(ldims):
+                            contract *= ldims[ci]
+            comp.flops += 2.0 * result_elems * contract
+
+        # collectives
+        for k in _COLLECTIVES:
+            if ins.opcode in (k, k + "-start"):
+                moved = _COLL_FACTOR[k] * max(
+                    ins.result_bytes, _operand_bytes(ins, table))
+                comp.coll[k] = comp.coll.get(k, 0.0) + moved
+                break
+
+        # bytes
+        if ins.opcode in _FREE_OPS or ins.opcode.endswith("-done"):
+            continue
+        # slicing ops touch only their slice, not the whole operand
+        if ins.opcode in ("dynamic-slice", "gather"):
+            moved = 2 * ins.result_bytes
+        elif ins.opcode == "dynamic-update-slice":
+            upd = table.get(ins.operands[1]) if len(ins.operands) > 1 \
+                else None
+            sl = upd.result_bytes if upd is not None else ins.result_bytes
+            moved = 2 * sl          # read-modify-write of the slice region
+        elif ins.opcode == "scatter":
+            upd = table.get(ins.operands[-1]) if ins.operands else None
+            sl = upd.result_bytes if upd is not None else ins.result_bytes
+            moved = 3 * sl
+        else:
+            moved = ins.result_bytes + _operand_bytes(ins, table)
+            if ins.opcode == "fusion":
+                m = _CALL_ATTR_RE.search(ins.line)
+                attrs = dict(_CALL_ATTR_RE.findall(ins.line))
+                child = attrs.get("calls")
+                if child in adjust:
+                    moved = max(ins.result_bytes, moved - adjust[child])
+        comp.bytes += moved
+        base = ins.opcode[:-6] if ins.opcode.endswith("-start") \
+            else ins.opcode
+        if base in _ESSENTIAL_OPS:
+            comp.bytes_min += moved
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    bytes_min: float
+    coll: Dict[str, float]
+    dynamic_whiles: int
+    breakdown: List[Tuple[str, float, float, float, float]]
+    # rows: (computation, multiplier, flops, bytes, coll_bytes)
+
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry, tables = _parse_computations(hlo)
+    adjust = {name: _slice_adjust(t) for name, t in tables.items()}
+    for name, comp in comps.items():
+        _accumulate(comp, tables[name], adjust)
+
+    dynamic = [0]
+    rows: Dict[str, List[float]] = {}
+
+    def walk(name: str, mult: float, in_fusion: bool,
+             seen: Tuple[str, ...]) -> Tuple[float, float, Dict[str, float]]:
+        if name not in comps or name in seen:
+            return 0.0, 0.0, 0.0, {}
+        c = comps[name]
+        own_bytes = 0.0 if in_fusion else c.bytes
+        own_min = 0.0 if in_fusion else c.bytes_min
+        flops = c.flops * mult
+        byts = own_bytes * mult
+        bmin = own_min * mult
+        coll = {k: v * mult for k, v in c.coll.items()}
+        r = rows.setdefault(name, [0.0, 0.0, 0.0, 0.0])
+        r[0] += mult
+        r[1] += flops
+        r[2] += own_bytes * mult
+        r[3] += sum(coll.values())
+
+        for kind, child, aux in c.children:
+            child_mult = mult
+            child_fusion = in_fusion
+            extra = []
+            if kind == "while":
+                trip = None
+                if aux and aux in comps and comps[aux].trip_hint:
+                    trip = comps[aux].trip_hint
+                if trip is None:
+                    dynamic[0] += 1
+                    trip = 1
+                child_mult = mult * trip
+                if aux:
+                    extra.append((aux, child_mult, child_fusion))
+            elif kind == "fusion":
+                child_fusion = True
+            f2, b2, m2, c2 = walk(child, child_mult, child_fusion,
+                                  seen + (name,))
+            flops += f2
+            byts += b2
+            bmin += m2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + v
+            for en, em, ef in extra:
+                f3, b3, m3, c3 = walk(en, em, ef, seen + (name,))
+                flops += f3
+                byts += b3
+                bmin += m3
+                for k, v in c3.items():
+                    coll[k] = coll.get(k, 0.0) + v
+        return flops, byts, bmin, coll
+
+    flops, byts, bmin, coll = walk(entry, 1.0, False, ())
+    breakdown = sorted(
+        ((n, v[0], v[1], v[2], v[3]) for n, v in rows.items()),
+        key=lambda t: -(t[2] + t[3]))
+    return HloCost(flops=flops, bytes=byts, bytes_min=bmin, coll=coll,
+                   dynamic_whiles=dynamic[0], breakdown=breakdown[:40])

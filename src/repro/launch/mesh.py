@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant):
+importing this module must not touch jax device state, because the
+dry-run sets ``xla_force_host_platform_device_count`` before any jax
+initialization and smoke tests must keep seeing 1 device.
+
+Mesh layout:
+  single-pod  (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod   (pod=2, data=16, model=16)     — 512 chips
+
+The ``model`` axis carries TP / EP / decode sequence-parallelism; the
+``data`` axis carries FSDP + batch DP; the ``pod`` axis carries pure DP
+(parameters replicated across pods, one gradient all-reduce per step
+over DCN — the only cross-pod traffic).  Elasticity: the mesh is a
+function of the live device list, and every sharding is derived from
+the mesh shape, so relaunching on (1|2|4, 16, 16) re-derives parameter
+shardings and reuses checkpoints unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None,
+                      model_parallel: int = 16):
+    """Mesh over whatever devices are alive: (pod, data, model) with the
+    pod×data product derived from the device count (elastic re-launch)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert n % model_parallel == 0, (n, model_parallel)
+    dp = n // model_parallel
+    pods = max(dp // 16, 1)
+    data = dp // pods
+    return jax.make_mesh((pods, data, model_parallel),
+                         ("pod", "data", "model"), devices=devices)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for CPU tests (requires >= n_data*n_model devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

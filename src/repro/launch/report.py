@@ -1,0 +1,97 @@
+"""Assemble EXPERIMENTS.md tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_all(base: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(base, "*", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        r["_file"] = base
+        r["_tag"] = parts[2] if len(parts) > 2 else ""
+        rows.append(r)
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_table(rows: List[Dict], mesh: str) -> str:
+    hdr = ("| arch | shape | kind | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| dominant | useful/HLO | roofline frac | HBM/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("skipped") or r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        hbm = (mem.get("argument_bytes") or 0) + \
+            (mem.get("temp_bytes") or 0)
+        tag = r["arch"] + (" (NODE)" if r.get("node_mode") else "") \
+            + (f" [{r['_tag']}]" if r.get("_tag") else "")
+        out.append(
+            f"| {tag} | {r['shape']} | {r['kind']} "
+            f"| {roof['t_compute']:.3e} | {roof['t_memory']:.3e} "
+            f"| {roof['t_collective']:.3e} | {roof['dominant']} "
+            f"| {roof['useful_flop_ratio']:.2f} "
+            f"| {roof['roofline_fraction']:.3f} "
+            f"| {fmt_bytes(hbm / r['n_devices'] if hbm else None)} |\n")
+    return "".join(out)
+
+
+def dryrun_table(rows: List[Dict], mesh: str) -> str:
+    hdr = ("| arch | shape | compile (s) | HLO flops/dev | HLO bytes/dev "
+           "| coll bytes/dev | top collectives |\n"
+           "|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("skipped") or r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        coll = sorted(roof["coll_by_kind"].items(), key=lambda kv: -kv[1])
+        cstr = ", ".join(f"{k}:{fmt_bytes(v)}" for k, v in coll[:2])
+        tag = r["arch"] + (" (NODE)" if r.get("node_mode") else "") \
+            + (f" [{r['_tag']}]" if r.get("_tag") else "")
+        out.append(
+            f"| {tag} | {r['shape']} | {r['compile_s']} "
+            f"| {roof['flops_per_device']:.2e} "
+            f"| {roof['bytes_per_device']:.2e} "
+            f"| {roof['coll_bytes_per_device']:.2e} | {cstr} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    for mesh in ("pod16x16", "pod2x16x16"):
+        n = sum(1 for r in rows if not r.get("skipped")
+                and r["mesh"] == mesh)
+        print(f"\n## Mesh {mesh} — {n} cells\n")
+        print(dryrun_table(rows, mesh))
+        print(roofline_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

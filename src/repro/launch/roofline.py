@@ -1,0 +1,269 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device            / peak_FLOP/s
+    memory     = HLO_bytes_per_device            / HBM_bw
+    collective = collective_bytes_per_device     / link_bw
+
+HLO FLOPs / bytes come from ``compiled.cost_analysis()`` (the post-SPMD
+per-device module).  Collective bytes are NOT in cost_analysis: they are
+parsed from the compiled (or lowered) HLO text by summing buffer sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaled by the ring factor of the op kind
+(all-reduce moves ≈2× its payload per device; gather/scatter/a2a ≈1×).
+Per-device bytes over per-link bandwidth equals the assignment's
+``collective_bytes / (chips × link_bw)`` with global bytes.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``model_flops`` cross-checks compiled compute against the 6·N·D (train)
+/ 2·N·D (inference) convention with N = active parameters; the ratio
+exposes remat/recompute/padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result-or-operand type like  bf16[16,4096,5120]{2,1,0}
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\]{},.]+)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_FACTOR = {
+    "all-reduce": 2.0,          # ring AR: 2(n-1)/n ≈ 2 payloads/device
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    m = _TYPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nb = _DTYPE_BYTES.get(dt)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Per-device collective bytes (ring-factor scaled) by op kind.
+
+    For each collective instruction, moved bytes ≈ factor × max(result
+    bytes, operand bytes) — the max covers all-gather (big result) and
+    reduce-scatter (big operand) symmetrically.  ``-done`` halves of
+    async pairs are skipped (the ``-start`` carries the shapes).
+    """
+    per_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            # async completion: shapes already counted at -start
+            if re.search(r"(all-reduce|all-gather|reduce-scatter|"
+                         r"all-to-all|collective-permute)-done", line):
+                continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        types = _TYPE_RE.findall(line)
+        # first type = result (lhs); operand types follow in the arg list
+        sizes = []
+        for dt, dims in types:
+            nb = _DTYPE_BYTES.get(dt)
+            if nb is None:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes.append(n * nb)
+        if not sizes:
+            continue
+        moved = _FACTOR[kind] * max(sizes)
+        per_kind[kind] = per_kind.get(kind, 0.0) + moved
+    return sum(per_kind.values()), per_kind
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (dense: all; MoE: shared + top-k)."""
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    per_layer_attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh \
+        + cfg.n_heads * dh * d
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.frontend != "none":
+        emb = cfg.vocab * d           # lm head only
+    if cfg.family == "moe":
+        f = cfg.d_expert
+        per_layer_ffn = (cfg.top_k + cfg.n_shared_experts) * 3 * d * f \
+            + d * cfg.n_experts       # router
+    elif cfg.family == "ssm":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per_layer_attn = 0
+        per_layer_ffn = 2 * d * di + 2 * d * cfg.ssm_ngroups * n \
+            + d * h + di * d
+    elif cfg.family == "hybrid":
+        dr = cfg.resolved_d_rnn
+        n_attn = sum(1 for k in _kinds(cfg) if k == "attn")
+        n_rec = cfg.n_layers - n_attn
+        gated = 3 if cfg.act == "silu" else 2
+        per_layer = (n_attn * (per_layer_attn + gated * d * cfg.d_ff)
+                     + n_rec * (3 * d * dr + 2 * dr * dr // 16
+                                + gated * d * cfg.d_ff)) // cfg.n_layers
+        return emb + per_layer * cfg.n_layers
+    else:
+        gated = 3 if cfg.act == "silu" else 2
+        per_layer_ffn = gated * d * cfg.d_ff
+    return emb + cfg.n_layers * (per_layer_attn + per_layer_ffn)
+
+
+def _kinds(cfg):
+    from repro.models.transformer import layer_kinds
+    return layer_kinds(cfg)
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq: int, batch: int) -> float:
+    """Reference FLOPs (global): 6·N·tokens train, 2·N·tokens inference.
+
+    decode processes 1 token per sequence (batch tokens total)."""
+    n = active_params(cfg)
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch        # decode: one token per sequence
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_kind: Dict[str, float]
+    n_devices: int
+    model_flops_global: float
+    # extras filled by analyze()
+    bytes_all_per_device: float = 0.0   # pessimistic (no-fusion) bound
+    xla_cost_flops: float = 0.0
+    xla_cost_bytes: float = 0.0
+    dynamic_whiles: int = 0
+    breakdown: Optional[list] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global) — remat/padding waste gauge."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time at peak / bound time — the MFU-at-bound."""
+        t_useful = (self.model_flops_global / self.n_devices) / PEAK_FLOPS
+        return t_useful / max(self.bound_time, 1e-30)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_by_kind": self.coll_by_kind,
+            "n_devices": self.n_devices,
+            "model_flops_global": self.model_flops_global,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_all_per_device": self.bytes_all_per_device,
+            "xla_cost_flops": self.xla_cost_flops,
+            "xla_cost_bytes": self.xla_cost_bytes,
+            "dynamic_whiles": self.dynamic_whiles,
+            "breakdown_top10": (self.breakdown or [])[:10],
+        }
+
+
+def analyze(compiled, cfg: ModelConfig, kind: str, seq: int, batch: int,
+            n_devices: int, hlo_text: Optional[str] = None) -> Roofline:
+    """Trip-count-aware terms from the compiled per-device HLO.
+
+    ``compiled.cost_analysis()`` counts scan bodies once (≈L× under for
+    scan-over-layers stacks), so the authoritative numbers come from
+    ``repro.launch.hlo_cost.analyze_hlo``; XLA's own aggregate is kept
+    in ``xla_cost_*`` fields for comparison.
+    """
+    from repro.launch.hlo_cost import analyze_hlo
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze_hlo(text)
+
+    xla_flops = xla_bytes = 0.0
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        xla_flops = float(cost.get("flops", 0.0))
+        xla_bytes = float(cost.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+
+    r = Roofline(
+        flops_per_device=hc.flops,
+        bytes_per_device=hc.bytes_min,
+        coll_bytes_per_device=hc.coll_total(),
+        coll_by_kind=dict(hc.coll),
+        n_devices=n_devices,
+        model_flops_global=model_flops(cfg, kind, seq, batch),
+    )
+    r.bytes_all_per_device = hc.bytes
+    r.xla_cost_flops = xla_flops
+    r.xla_cost_bytes = xla_bytes
+    r.dynamic_whiles = hc.dynamic_whiles
+    r.breakdown = hc.breakdown
+    return r

@@ -1,0 +1,22 @@
+"""repro.models — transformer / MoE / hybrid / SSM model zoo.
+
+Pure-functional model definitions: parameters are pytrees of arrays,
+described by ``ParamDef`` trees that carry shapes, dtypes, logical sharding
+axes and initializers — one source of truth serving real initialization
+(smoke tests), abstract ``ShapeDtypeStruct`` instantiation (the multi-pod
+dry-run) and ``PartitionSpec`` derivation (pjit in/out shardings).
+"""
+
+from .common import ParamDef, abstract_params, init_params, param_specs
+from .config import ModelConfig, RunConfig
+from .lm import build_model
+
+__all__ = [
+    "ParamDef",
+    "abstract_params",
+    "init_params",
+    "param_specs",
+    "ModelConfig",
+    "RunConfig",
+    "build_model",
+]

@@ -1,0 +1,341 @@
+"""GQA attention: training, chunked long-context prefill, flash-decode.
+
+Three compute paths, all numerically the online-softmax algorithm:
+
+* ``full``     — dense causal (optionally sliding-window) attention for
+  short sequences; scores materialize (B,H,S,S).
+* ``chunked``  — lax.scan over KV blocks with running (m, l, o) —
+  flash-attention in pure XLA; memory O(S·block) per device.  Used for
+  long prefill where dense scores would not fit HBM.  FLOPs equal the
+  dense formulation (both compute the masked upper triangle); the Pallas
+  flash kernel (repro.kernels.flash_attention) additionally skips fully
+  masked blocks on real TPUs.
+* ``decode``   — single query against a KV cache.  With a mesh and
+  ``decode_seq_shard`` the cache sequence dim is sharded over the model
+  axis and partial softmax statistics are combined with psum/pmax
+  (flash-decode); this is what makes 500k-token caches feasible per chip.
+
+GQA is computed with keys/values expanded to the full head count
+(`repeat` over groups).  Under GSPMD this keeps every attention einsum
+local to its head shard; the Pallas kernel avoids the expansion natively.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import shard
+from .common import ParamDef, apply_rope, dense
+from .config import ModelConfig, RunConfig
+
+PyTree = Any
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps masked-all lanes finite
+
+
+def attn_defs(cfg: ModelConfig, param_dtype) -> PyTree:
+    d, h, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, h * dh), param_dtype, ("embed", "heads")),
+        "wk": ParamDef((d, hk * dh), param_dtype, ("embed", "kv_heads")),
+        "wv": ParamDef((d, hk * dh), param_dtype, ("embed", "kv_heads")),
+        "wo": ParamDef((h * dh, d), param_dtype, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h * dh,), param_dtype, ("heads_act",),
+                              init="zeros")
+        defs["bk"] = ParamDef((hk * dh,), param_dtype, ("kv_heads_act",),
+                              init="zeros")
+        defs["bv"] = ParamDef((hk * dh,), param_dtype, ("kv_heads_act",),
+                              init="zeros")
+    return defs
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,Hkv,dh) -> (B,S,Hkv*groups,dh) repeating each kv head."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _causal_mask(sq: int, skv: int, offset: int, window: int) -> jnp.ndarray:
+    """(sq, skv) bool mask. query i attends key j iff
+    j <= i+offset and (window == 0 or j > i+offset-window)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def full_attention(q, k, v, *, offset: int = 0, window: int = 0,
+                   scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense causal attention. q (B,Sq,H,dh), k/v (B,Skv,H,dh)."""
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = _causal_mask(q.shape[1], k.shape[1], offset, window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def chunked_attention(q, k, v, *, window: int = 0, block: int = 1024,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """Causal flash-style attention: scan over KV blocks with running
+    (max, sum, out) statistics.  Memory O(Sq·block); identical output to
+    ``full_attention`` (same-seq case, offset 0)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    assert skv % block == 0, (skv, block)
+    nb = skv // block
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    qf = q.astype(jnp.float32) * scale
+    kb = k.reshape(b, nb, block, h, dh)
+    vb = v.reshape(b, nb, block, h, dh)
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    o0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+
+    qi = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, o = carry
+        jblk, kj, vj = inp                       # kj/vj: (B, block, H, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32))
+        kpos = jblk * block + jnp.arange(block)
+        mask = kpos[None, :] <= qi[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qi[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (jnp.arange(nb), kb.swapaxes(0, 1), vb.swapaxes(0, 1)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)      # (B,Sq,H,dh)
+
+
+def sliding_window_attention(q, k, v, *, window: int,
+                             scale: Optional[float] = None) -> jnp.ndarray:
+    """Banded attention via same-chunk + previous-chunk blocks.
+
+    Memory O(S·2w) instead of O(S²).  Requires S % window == 0.
+    """
+    b, s, h, dh = q.shape
+    if s <= window or s % window != 0:
+        # non-multiple lengths (tests, ragged tails): dense banded fallback
+        return full_attention(q, k, v, window=window, scale=scale)
+    nc = s // window
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    qc = q.reshape(b, nc, window, h, dh)
+    kc = k.reshape(b, nc, window, h, dh)
+    vc = v.reshape(b, nc, window, h, dh)
+    # previous chunk (zeros before chunk 0)
+    kp = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vp = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kp, kc], axis=2)         # (B,nc,2w,H,dh)
+    v2 = jnp.concatenate([vp, vc], axis=2)
+
+    sc = jnp.einsum("bcqhd,bckhd->bchqk", qc,
+                    k2).astype(jnp.float32) * scale
+    # positions within the 2w key window: query i (0..w-1) at global w+i
+    qi = jnp.arange(window)[:, None] + window
+    kj = jnp.arange(2 * window)[None, :]
+    mask = (kj <= qi) & (kj > qi - window)
+    first = jnp.arange(nc) == 0                     # chunk 0 has no prev keys
+    mask = mask[None] & ~(first[:, None, None] & (kj < window)[None])
+    sc = jnp.where(mask[None, :, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", p, v2)
+    return out.reshape(b, s, h, dh)
+
+
+# ----------------------------------------------------------------------------
+# Decode (single token vs KV cache)
+# ----------------------------------------------------------------------------
+
+def _decode_partial(q, k, v, valid, scale):
+    """Partial flash-decode statistics over a KV shard.
+
+    q (B,1,H,dh); k/v (B,Sl,H,dh); valid (B,Sl) bool.
+    Returns m (B,H), l (B,H), o (B,H,dh) in fp32.
+    """
+    s = jnp.einsum("bqhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale   # (B,H,Sl)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def decode_attention(q, k_cache, v_cache, valid, *,
+                     groups: int,
+                     scale: Optional[float] = None,
+                     mesh=None, rules=None,
+                     seq_shard: bool = True) -> jnp.ndarray:
+    """One-token attention against a cache (B,Smax,Hkv,dh).
+
+    ``valid`` (B,Smax) bool marks live cache slots (the caller handles
+    ring-buffer / length semantics).  With a mesh and ``seq_shard`` the
+    cache sequence dim is sharded over the model axis and partial softmax
+    statistics are combined with psum/pmax (flash-decode).
+    """
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    smax = k_cache.shape[1]
+
+    def local(q, k, v, valid):
+        ke = _expand_kv(k, groups)
+        ve = _expand_kv(v, groups)
+        return _decode_partial(q, ke, ve, valid, scale)
+
+    use_shard = (mesh is not None and not mesh.empty
+                 and "model" in mesh.axis_names and seq_shard
+                 and smax % mesh.shape["model"] == 0)
+    if not use_shard:
+        m, l, o = local(q, k_cache, v_cache, valid)
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return out[:, None].astype(q.dtype).reshape(q.shape)
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    # small batches (e.g. the 500k single-sequence cell) replicate
+    bspec = batch_axes if (batch_axes and q.shape[0] % n_batch == 0) \
+        else None
+
+    def shard_fn(q, k, v, valid):
+        # per-device: q (B_l,1,H,dh) replicated over model; k/v seq-shard
+        m, l, o = local(q, k, v, valid)
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        o_g = jax.lax.psum(o * corr[..., None], "model")
+        return o_g / jnp.maximum(l_g[..., None], 1e-30)
+
+    out = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model")),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, valid)
+    return out[:, None].astype(q.dtype)             # (B,1,H,dh)
+
+
+# ----------------------------------------------------------------------------
+# Attention block (projections + rope + core + output)
+# ----------------------------------------------------------------------------
+
+def attention_apply(
+    p: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    rcfg: RunConfig,
+    *,
+    mode: str,                            # train | prefill | decode
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    window: Optional[int] = None,
+    dense_attn_max_seq: int = 8192,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full attention sub-block.  x (B,S,D) -> (y (B,S,D), new_cache)."""
+    b, s, d = x.shape
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    groups = h // hk
+    win = cfg.window if window is None else window
+    cd = rcfg.compute_dtype
+    mesh, rules = rcfg.mesh, rcfg.rules
+
+    q = dense(x, p["wq"], p.get("bq"), cd).reshape(b, s, h, dh)
+    k = dense(x, p["wk"], p.get("bk"), cd).reshape(b, s, hk, dh)
+    v = dense(x, p["wv"], p.get("bv"), cd).reshape(b, s, hk, dh)
+
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    q = shard(q, ("batch", "seq", "heads_act", None), rules, mesh)
+    k = shard(k, ("batch", "seq", "kv_heads_act", None), rules, mesh)
+    v = shard(v, ("batch", "seq", "kv_heads_act", None), rules, mesh)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        clen = cache["len"]                   # global position counter
+        slots = cache["k"].shape[1]
+        # ring-buffer write for windowed caches; plain append otherwise
+        widx = clen % slots if win > 0 else clen
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), widx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), widx, axis=1)
+        k_cache = shard(k_cache, ("batch", "kv_seq", None, None), rules, mesh)
+        v_cache = shard(v_cache, ("batch", "kv_seq", None, None), rules, mesh)
+        new_cache = {"k": k_cache, "v": v_cache, "len": clen + 1}
+        valid = jnp.arange(slots)[None, :] < jnp.minimum(clen + 1, slots)
+        valid = jnp.broadcast_to(valid, (b, slots))
+        out = decode_attention(
+            q, k_cache, v_cache, valid, groups=groups,
+            mesh=mesh, rules=rules, seq_shard=rcfg.decode_seq_shard)
+    else:
+        ke = _expand_kv(k, groups)
+        ve = _expand_kv(v, groups)
+        ke = shard(ke, ("batch", "seq", "heads_act", None), rules, mesh)
+        ve = shard(ve, ("batch", "seq", "heads_act", None), rules, mesh)
+        if win > 0 and s > win:
+            out = sliding_window_attention(q, ke, ve, window=win)
+        elif s <= dense_attn_max_seq:
+            out = full_attention(q, ke, ve, window=win)
+        else:
+            out = chunked_attention(q, ke, ve, window=win)
+        if mode == "prefill":
+            # write k/v into a fixed-capacity (ring for windowed) cache
+            slots = rcfg.max_seq if win == 0 else min(rcfg.max_seq, win)
+            slots = max(slots, s if win == 0 else min(s, win))
+            if win > 0 and s >= slots:
+                kk = k[:, -slots:]
+                vv = v[:, -slots:]
+                shift = s % slots
+                if shift:   # key at global pos p lives at slot p % slots
+                    kk = jnp.roll(kk, shift, axis=1)
+                    vv = jnp.roll(vv, shift, axis=1)
+            else:
+                pad = slots - s
+                kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kk = shard(kk, ("batch", "kv_seq", None, None), rules, mesh)
+            vv = shard(vv, ("batch", "kv_seq", None, None), rules, mesh)
+            new_cache = {"k": kk, "v": vv, "len": jnp.asarray(s, jnp.int32)}
+
+    out = shard(out, ("batch", "seq", "heads_act", None), rules, mesh)
+    y = dense(out.reshape(b, s, h * dh), p["wo"], None, cd)
+    y = shard(y, ("batch", "res_seq", "embed_act"), rules, mesh)
+    return y, new_cache

@@ -1,0 +1,190 @@
+"""Shared model building blocks: ParamDef trees, norms, RoPE, initializers.
+
+``ParamDef`` is the single source of truth for every parameter: its shape,
+dtype, *logical* sharding axes and initializer.  From one ParamDef tree we
+derive
+
+  * ``init_params``      — materialized arrays (CPU smoke tests, examples),
+  * ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run
+    lowering: no allocation ever happens for the full-size configs),
+  * ``param_specs``      — ``PartitionSpec`` tree for pjit shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules, logical_to_spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | embed | uniform_ssm
+    scale: Optional[float] = None  # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (
+            f"shape {self.shape} vs logical {self.logical}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # weights are stored (in_dim..., out_dim); fan-in = prod of all but last
+    if len(shape) == 1:
+        return shape[0]
+    return int(math.prod(shape[:-1]))
+
+
+def _init_one(d: ParamDef, key) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 0.02
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    if d.init == "uniform_ssm":
+        # A_log init for SSMs: A in [1, 16], stored as log
+        u = jax.random.uniform(key, d.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(d.dtype)
+    if d.init == "normal":
+        std = d.scale if d.scale is not None else 1.0 / math.sqrt(
+            max(_fan_in(d.shape), 1))
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs: PyTree, key) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=_is_def)
+
+
+def param_specs(defs: PyTree, rules: AxisRules, mesh=None) -> PyTree:
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.logical, rules, mesh), defs,
+        is_leaf=_is_def)
+
+
+def param_count(defs: PyTree) -> int:
+    return sum(
+        int(math.prod(d.shape))
+        for d in jax.tree.leaves(defs, is_leaf=_is_def))
+
+
+def param_bytes(defs: PyTree) -> int:
+    return sum(
+        int(math.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(defs, is_leaf=_is_def))
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray,
+            eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm in fp32 with cast back to input dtype (production practice)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, x, p, eps: float = 1e-6):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"], eps)
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"], eps)
+    raise ValueError(kind)
+
+
+def norm_defs(kind: str, dim: int, dtype) -> PyTree:
+    if kind == "rmsnorm":
+        return {"w": ParamDef((dim,), dtype, ("embed_act",), init="ones")}
+    if kind == "layernorm":
+        return {
+            "w": ParamDef((dim,), dtype, ("embed_act",), init="ones"),
+            "b": ParamDef((dim,), dtype, ("embed_act",), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,), fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """Rotate (..., S, H, Dh) by positions (..., S); NeoX-style half-split."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Misc
+# ----------------------------------------------------------------------------
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None,
+          compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x @ w (+ b) with params cast to the compute dtype."""
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   w.astype(compute_dtype))
+    if b is not None:
+        y = y + b.astype(compute_dtype)
+    return y
+
+
+def activation(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)

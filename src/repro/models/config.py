@@ -1,0 +1,101 @@
+"""Model / run configuration dataclasses.
+
+``ModelConfig`` describes an architecture (one per assigned arch in
+``repro.configs``); ``RunConfig`` describes how it is executed: mesh,
+sharding rules, dtypes, NODE (continuous-depth) mode, remat policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.node_block import NodeConfig
+from repro.distributed.sharding import AxisRules, DEFAULT_TRAIN_RULES
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int = 0             # sliding-window size (0 = full attention)
+    # ffn
+    d_ff: int = 0
+    act: str = "silu"
+    mlp_bias: bool = False
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    parallel_block: bool = False  # command-r style: attn+ffn from same norm
+    tie_embeddings: bool = False
+    # moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0           # per-expert FFN width
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # hybrid (recurrentgemma): repeating block pattern
+    pattern: Tuple[str, ...] = ()      # e.g. ("rec", "rec", "attn")
+    d_rnn: int = 0              # RG-LRU width (0 -> d_model)
+    conv_width: int = 4
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+    # frontend stub
+    frontend: str = "none"      # none | vlm | audio
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def resolved_d_rnn(self) -> int:
+        return self.d_rnn or self.d_model
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """Reduced config of the same family (smoke tests)."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    mesh: Any = None                      # jax.sharding.Mesh or None
+    rules: AxisRules = DEFAULT_TRAIN_RULES
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "none"                   # none | block  (activation ckpt)
+    node: NodeConfig = NodeConfig()       # continuous-depth (the paper)
+    scan_layers: bool = True              # scan-over-layers (O(1) HLO size)
+    use_pallas: bool = False              # TPU kernels (interpret in tests)
+    decode_seq_shard: bool = True         # flash-decode KV-seq sharding
+    max_seq: int = 0                      # KV-cache capacity (serving)
+    zero1: bool = True                    # optimizer states sharded like params
+    label_smoothing: float = 0.0
+
+    def with_(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,48 @@
+"""Feed-forward blocks: SwiGLU (gated) and plain MLP, with bias variants."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .common import ParamDef, activation, dense
+from .config import ModelConfig, RunConfig
+
+PyTree = Any
+
+
+def ffn_defs(cfg: ModelConfig, param_dtype, d_ff: int = 0,
+             gated: bool = True) -> PyTree:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    defs = {
+        "w_in": ParamDef((d, f), param_dtype, ("embed", "mlp")),
+        "w_out": ParamDef((f, d), param_dtype, ("mlp", "embed")),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((d, f), param_dtype, ("embed", "mlp"))
+    if cfg.mlp_bias:
+        defs["b_in"] = ParamDef((f,), param_dtype, ("mlp_act",),
+                                init="zeros")
+        defs["b_out"] = ParamDef((d,), param_dtype, ("embed_act",),
+                                 init="zeros")
+    return defs
+
+
+def ffn_apply(p: PyTree, x: jnp.ndarray, cfg: ModelConfig,
+              rcfg: RunConfig) -> jnp.ndarray:
+    """x (B,S,D) -> (B,S,D).  SwiGLU when a gate weight is present."""
+    cd = rcfg.compute_dtype
+    mesh, rules = rcfg.mesh, rcfg.rules
+    h = dense(x, p["w_in"], p.get("b_in"), cd)
+    h = shard(h, ("batch", "seq", "mlp_act"), rules, mesh)
+    if "w_gate" in p:
+        g = dense(x, p["w_gate"], None, cd)
+        g = shard(g, ("batch", "seq", "mlp_act"), rules, mesh)
+        h = activation(cfg.act, g) * h
+    else:
+        h = activation(cfg.act, h)
+    y = dense(h, p["w_out"], p.get("b_out"), cd)
+    return shard(y, ("batch", "res_seq", "embed_act"), rules, mesh)

@@ -1,0 +1,52 @@
+"""Modality frontend STUBS (per assignment: backbone-only).
+
+The ``[vlm]`` / ``[audio]`` architectures are exercised through their
+transformer backbone; the image / audio encoders are represented by
+precomputed embeddings supplied through ``input_specs()``:
+
+  * llava-next  — "anyres" tiling produces N patch embeddings per image;
+    the stub supplies ``embeds`` = concat(patch_embeds, text_embeds)
+    already projected to d_model.
+  * musicgen    — EnCodec tokenization produces 4-codebook frames; the
+    stub supplies per-frame summed codebook embeddings at d_model.
+
+These helpers produce ShapeDtypeStructs for the dry-run and synthetic
+arrays for smoke tests; shapes match the (B, S) of the assigned input
+shape with S counting frontend positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+PyTree = Any
+
+
+def frontend_batch_abstract(cfg: ModelConfig, batch: int, seq: int,
+                            compute_dtype=jnp.bfloat16
+                            ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct batch for a frontend-stub arch (train mode)."""
+    return {
+        "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                       compute_dtype),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+    }
+
+
+def frontend_batch_synthetic(cfg: ModelConfig, batch: int, seq: int, key,
+                             compute_dtype=jnp.bfloat16
+                             ) -> Dict[str, jnp.ndarray]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embeds": (jax.random.normal(k1, (batch, seq, cfg.d_model)) * 0.02
+                   ).astype(compute_dtype),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab,
+                                     jnp.int32),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }

@@ -1,0 +1,245 @@
+"""Mamba-2 block: state-space duality (SSD) with chunked scan.
+
+The selective SSM  h_t = exp(dt_t·A) h_{t-1} + dt_t·(B_t ⊗ x_t),
+y_t = C_t·h_t + D⊙x_t  is computed with the SSD chunked algorithm
+(Dao & Gu 2024): the sequence is split into chunks of length Q;
+
+  * intra-chunk term — a masked (1-semiseparable) attention-like matmul
+    Y_diag = ((C_c B_cᵀ) ⊙ L) X_c,
+  * chunk boundary states — S_c = (B_c ⊙ decay_to_end)ᵀ X_c,
+  * inter-chunk term — a *sequential scan over chunk states* (S/Q steps),
+    which is exactly the paper's trajectory-checkpoint structure: chunk
+    states are the checkpoints, intra-chunk work is recomputed locally.
+
+All einsums are head-parallel: heads shard over the model axis (TP).
+Decode is the O(1) recurrent update on a carried (B,H,P,N) state, which
+is what makes the 500k-token decode cell feasible (no KV cache at all).
+
+``ssd_chunked`` is the pure-jnp oracle shared with the Pallas kernel in
+``repro.kernels.ssd_scan`` (ref.py imports it).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .common import ParamDef, dense, rmsnorm
+from .config import ModelConfig, RunConfig
+from .rglru import causal_conv1d, conv_tail
+
+PyTree = Any
+
+
+def mamba2_defs(cfg: ModelConfig, param_dtype) -> PyTree:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    g = cfg.ssm_ngroups
+    return {
+        # separate projections (a fused (D, 2di+2gn+h) proj has identical
+        # FLOPs; separate keeps sharding clean — see DESIGN perf notes)
+        "w_z": ParamDef((d, di), param_dtype, ("embed", "mlp")),
+        "w_x": ParamDef((d, di), param_dtype, ("embed", "mlp")),
+        "w_b": ParamDef((d, g * n), param_dtype, ("embed", None)),
+        "w_c": ParamDef((d, g * n), param_dtype, ("embed", None)),
+        "w_dt": ParamDef((d, h), param_dtype, ("embed", None)),
+        "dt_bias": ParamDef((h,), jnp.float32, (None,), init="zeros"),
+        "a_log": ParamDef((h,), jnp.float32, (None,), init="uniform_ssm"),
+        "d_skip": ParamDef((h,), jnp.float32, (None,), init="ones"),
+        "conv_x": ParamDef((cfg.ssm_conv, di), param_dtype,
+                           ("conv", "mlp_act")),
+        "conv_b": ParamDef((cfg.ssm_conv, g * n), param_dtype,
+                           ("conv", None)),
+        "conv_c": ParamDef((cfg.ssm_conv, g * n), param_dtype,
+                           ("conv", None)),
+        "norm": ParamDef((di,), param_dtype, ("mlp_act",), init="ones"),
+        "w_out": ParamDef((di, d), param_dtype, ("mlp", "embed")),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k]
+    for j < i, else -inf-ish (masked).  x (..., Q)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # sum_(j..i]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)  fp32, post-softplus
+    a: jnp.ndarray,      # (H,)       fp32, negative (decay rate)
+    b_mat: jnp.ndarray,  # (B, S, G, N)
+    c_mat: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,   # (B, H, P, N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked scan.  Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtc = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2) \
+        .reshape(bsz, nc, chunk, h, n)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2) \
+        .reshape(bsz, nc, chunk, h, n)
+
+    da = dtc * a[None, None, None, :]                    # (B,nc,Q,H)
+    da_cum = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    da_total = da_cum[:, :, -1]                          # (B,nc,H)
+
+    # ---- intra-chunk (diagonal-block) output --------------------------
+    l_mat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))   # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", cf, bf)        # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp",
+                        cb * l_mat, dtc, xf)
+
+    # ---- chunk boundary states ---------------------------------------
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        bf, dtc * decay_to_end, xf)      # (B,nc,H,P,N)
+
+    # ---- inter-chunk sequential scan over chunk states ----------------
+    init = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h_prev, inp):
+        st, datot = inp                                  # (B,H,P,N),(B,H)
+        h_new = h_prev * jnp.exp(datot)[..., None, None] + st
+        return h_new, h_prev                             # emit PRE-state
+
+    h_last, h_prevs = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), da_total.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                     # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution to outputs --------------------------
+    decay_from_start = jnp.exp(da_cum)                   # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         cf, h_prevs, decay_from_start)
+
+    y = (y_diag + y_inter).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,      # (B, H, P)
+    dt: jnp.ndarray,     # (B, H) fp32 post-softplus
+    a: jnp.ndarray,      # (H,)
+    b_vec: jnp.ndarray,  # (B, G, N)
+    c_vec: jnp.ndarray,  # (B, G, N)
+    state: jnp.ndarray,  # (B, H, P, N) fp32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSM update.  Returns (y (B,H,P), new_state)."""
+    h, g = x.shape[1], b_vec.shape[1]
+    rep = h // g
+    bf = jnp.repeat(b_vec.astype(jnp.float32), rep, axis=1)   # (B,H,N)
+    cf = jnp.repeat(c_vec.astype(jnp.float32), rep, axis=1)
+    da = jnp.exp(dt * a[None])                                # (B,H)
+    new_state = state * da[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhpn", bf, dt, x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", cf, new_state)
+    return y, new_state
+
+
+def mamba2_block_apply(
+    p: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    rcfg: RunConfig,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba-2 block.  x (B,S,D) -> (y (B,S,D), new_cache)."""
+    cd = rcfg.compute_dtype
+    mesh, rules = rcfg.mesh, rcfg.rules
+    bsz, s, _ = x.shape
+    hh, pp, nn = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_ngroups
+
+    z = dense(x, p["w_z"], None, cd)
+    u = dense(x, p["w_x"], None, cd)
+    u = shard(u, ("batch", "seq", "mlp_act"), rules, mesh)
+    bm = dense(x, p["w_b"], None, cd)
+    cm = dense(x, p["w_c"], None, cd)
+    dt_raw = dense(x, p["w_dt"], None, cd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"])
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        w = p["conv_x"].shape[0]
+        cs = cache["conv"]                   # (B, W-1, di + 2gn)
+        di = u.shape[-1]
+        cat = jnp.concatenate([u, bm, cm], axis=-1)
+        u2 = causal_conv1d(u, p["conv_x"], state=cs[..., :di])
+        bm2 = causal_conv1d(bm, p["conv_b"],
+                            state=cs[..., di:di + g * nn])
+        cm2 = causal_conv1d(cm, p["conv_c"], state=cs[..., di + g * nn:])
+        u2, bm2, cm2 = (jax.nn.silu(t) for t in (u2, bm2, cm2))
+        y1, st = ssd_decode_step(
+            u2[:, 0].reshape(bsz, hh, pp), dt[:, 0], a,
+            bm2[:, 0].reshape(bsz, g, nn), cm2[:, 0].reshape(bsz, g, nn),
+            cache["ssm"])
+        y = y1[:, None]
+        conv_new = jnp.concatenate(
+            [cs[:, 1:], cat.astype(cs.dtype)], axis=1) if w > 1 else cs
+        new_cache = {"conv": conv_new, "ssm": st}
+    else:
+        u2 = jax.nn.silu(causal_conv1d(u, p["conv_x"]))
+        bm2 = jax.nn.silu(causal_conv1d(bm, p["conv_b"]))
+        cm2 = jax.nn.silu(causal_conv1d(cm, p["conv_c"]))
+        h0 = cache["ssm"] if cache is not None else None
+        # pad S to a chunk multiple (dt=0 padding is state-neutral)
+        q = cfg.ssm_chunk
+        pad = (-s) % q
+        if pad:
+            zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),)
+                                   * (t.ndim - 2))
+            u2p, bm2p, cm2p, dtp = zp(u2), zp(bm2), zp(cm2), zp(dt)
+        else:
+            u2p, bm2p, cm2p, dtp = u2, bm2, cm2, dt
+        sp = s + pad
+        y, h_last = ssd_chunked(
+            u2p.reshape(bsz, sp, hh, pp), dtp, a,
+            bm2p.reshape(bsz, sp, g, nn), cm2p.reshape(bsz, sp, g, nn),
+            q, h0=h0)
+        y = y[:, :s]
+        if mode == "prefill":
+            w = p["conv_x"].shape[0]
+            cat = jnp.concatenate([u, bm, cm], axis=-1)
+            conv_new = conv_tail(cat, w).astype(jnp.float32)
+            new_cache = {"conv": conv_new, "ssm": h_last}
+
+    y = y + (u2.reshape(bsz, s, hh, pp).astype(jnp.float32)
+             * p["d_skip"][None, None, :, None]).astype(y.dtype)
+    y = y.reshape(bsz, s, hh * pp).astype(cd)
+    y = shard(y, ("batch", "seq", "mlp_act"), rules, mesh)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = dense(y, p["w_out"], None, cd)
+    return shard(out, ("batch", "res_seq", "embed_act"), rules,
+                 mesh), new_cache
+
+
+def mamba2_cache_defs(cfg: ModelConfig, batch: int) -> PyTree:
+    di = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, di + 2 * gn),
+                         jnp.float32, ("batch", None, None), init="zeros"),
+        "ssm": ParamDef((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32,
+                        ("batch", "heads_act", None, None), init="zeros"),
+    }

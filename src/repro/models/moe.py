@@ -1,0 +1,218 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Design (1000+-chip posture):
+
+* Experts are sharded over the **model** axis (EP): each model shard owns
+  E/n_model experts.  Expert weight matrices additionally shard their
+  d_model dim over the **data** axis (FSDP); the forward all-gathers them
+  over "data" (transposed to a reduce-scatter in the backward) — ZeRO-3
+  memory scaling for the dominant parameter block of MoE models.
+* Activations stay **replicated over model** between blocks (standard TP
+  residual stream).  Each model shard routes the full local token set,
+  gathers the tokens assigned to *its* experts into a static-capacity
+  buffer (scatter/gather, no (T,E,C) one-hot), runs a batched expert FFN,
+  scatters back, and a single psum over "model" combines expert
+  contributions — the same collective TP-FFN needs anyway, so EP adds no
+  extra communication beyond the FSDP weight gathers.
+* Routing: softmax router, top-k with renormalization, static capacity
+  C = ceil(T_local·k/E·capacity_factor); overflow tokens are dropped
+  (standard capacity-style MoE).  A Switch-style load-balancing aux loss
+  is returned to the trainer.
+
+The router's hard top-k is a discrete decision *inside* the dynamics f
+when NODE mode wraps an MoE block; ACA only needs f a.e.-differentiable
+(paper Appendix C), which holds.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import logical_to_spec, shard
+from .common import ParamDef, activation, dense
+from .config import ModelConfig, RunConfig
+from .ffn import ffn_apply, ffn_defs
+
+PyTree = Any
+
+
+def moe_defs(cfg: ModelConfig, param_dtype) -> PyTree:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    defs = {
+        "router": ParamDef((d, e), param_dtype, ("embed_act", None),
+                           scale=0.02),
+        "w_gate": ParamDef((e, d, f), param_dtype, ("expert", "embed", None)),
+        "w_in": ParamDef((e, d, f), param_dtype, ("expert", "embed", None)),
+        "w_out": ParamDef((e, f, d), param_dtype, ("expert", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        shared_cfg = cfg.scaled(d_ff=cfg.n_shared_experts * f, mlp_bias=False)
+        defs["shared"] = ffn_defs(shared_cfg, param_dtype,
+                                  d_ff=cfg.n_shared_experts * f)
+    return defs
+
+
+def _capacity(tokens_local: int, cfg: ModelConfig) -> int:
+    c = tokens_local * cfg.top_k / cfg.n_experts * cfg.capacity_factor
+    return max(int(math.ceil(c)), 1)
+
+
+def _route(x: jnp.ndarray, router_w: jnp.ndarray,
+           cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Router: returns (ids (B,S,k) int32, gates (B,S,k) fp32, probs)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), gates, probs
+
+
+def aux_load_balance_loss(ids: jnp.ndarray, probs: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-Transformer load-balancing loss: E · Σ_e f_e · p̄_e."""
+    assign = jax.nn.one_hot(ids, n_experts, dtype=jnp.float32).sum(-2)
+    f_e = assign.mean(axis=tuple(range(assign.ndim - 1)))
+    p_e = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    return n_experts * jnp.sum(f_e * p_e / max(1, 1))
+
+
+def _expert_compute(xe: jnp.ndarray, w_gate, w_in, w_out,
+                    act: str, cd) -> jnp.ndarray:
+    """Batched expert SwiGLU: xe (E_l, C, D) -> (E_l, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate.astype(cd))
+    h = jnp.einsum("ecd,edf->ecf", xe, w_in.astype(cd))
+    h = activation(act, g) * h
+    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(cd))
+
+
+def _dispatch_compute_combine(
+    x_flat: jnp.ndarray,        # (T, D)
+    ids: jnp.ndarray,           # (T, k)
+    gates: jnp.ndarray,         # (T, k) fp32
+    w_gate, w_in, w_out,        # (E_l, D, F) / (E_l, F, D)
+    e_offset: int,
+    capacity: int,
+    cfg: ModelConfig,
+    cd,
+) -> jnp.ndarray:
+    """Capacity-dispatch for the E_l local experts.  Returns (T, D)."""
+    t, d = x_flat.shape
+    e_l = w_in.shape[0]
+    c = capacity
+
+    # local-expert assignment mask (T, E_l) and per-pair gate values
+    local_ids = ids - e_offset                       # (T, k)
+    onehot = jax.nn.one_hot(local_ids, e_l, dtype=jnp.float32)  # (T,k,E_l)
+    assign = onehot.max(axis=1) > 0                  # (T, E_l) bool
+    gate_te = jnp.einsum("tk,tke->te", gates, onehot)  # (T, E_l)
+
+    # slot within each expert's capacity buffer
+    pos = jnp.cumsum(assign.astype(jnp.int32), axis=0) - 1      # (T, E_l)
+    keep = assign & (pos < c)
+    slot = jnp.where(keep, pos, c)                   # overflow -> trash slot
+
+    # build (E_l, C+1) token-index table via one scatter
+    slots = jnp.full((e_l, c + 1), t, jnp.int32)     # sentinel = pad row
+    e_idx = jnp.broadcast_to(jnp.arange(e_l)[None], (t, e_l))
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, e_l))
+    slots = slots.at[e_idx.reshape(-1), slot.reshape(-1)].set(
+        tok_idx.reshape(-1), mode="drop")
+    slots = slots[:, :c]                             # (E_l, C)
+
+    # gather tokens (sentinel hits the zero pad row)
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], 0)
+    xe = x_pad[slots]                                # (E_l, C, D)
+
+    ye = _expert_compute(xe, w_gate, w_in, w_out, cfg.act, cd)
+
+    # combine: scatter-add weighted outputs back to token positions
+    g_pad = jnp.concatenate([gate_te, jnp.zeros((1, e_l), gate_te.dtype)], 0)
+    gate_slots = g_pad[slots, jnp.arange(e_l)[:, None]]          # (E_l, C)
+    y = jnp.zeros((t + 1, d), ye.dtype)
+    y = y.at[slots.reshape(-1)].add(
+        (ye * gate_slots[..., None].astype(ye.dtype)).reshape(-1, d))
+    return y[:t]
+
+
+def moe_apply(
+    p: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    rcfg: RunConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE block: x (B,S,D) -> (y (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    cd = rcfg.compute_dtype
+    mesh, rules = rcfg.mesh, rcfg.rules
+
+    ids, gates, probs = _route(x, p["router"], cfg)
+    aux = aux_load_balance_loss(ids, probs, cfg.n_experts)
+
+    use_shard = (mesh is not None and not mesh.empty
+                 and "model" in mesh.axis_names)
+
+    if use_shard:
+        n_model = mesh.shape["model"]
+        n_data_total = math.prod(
+            mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names)
+        assert cfg.n_experts % n_model == 0, (cfg.n_experts, n_model)
+        e_l = cfg.n_experts // n_model
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+        if not batch_axes or b % n_data_total != 0:
+            batch_axes = ()        # small batch: replicate over data
+            n_data_total = 1
+        t_local = (b // n_data_total) * s
+        c = _capacity(t_local, cfg)
+        bspec = batch_axes if batch_axes else None
+        has_data = "data" in mesh.axis_names
+        wspec = logical_to_spec(("expert", "embed", None), rules, mesh)
+        wspec_out = logical_to_spec(("expert", None, "embed"), rules, mesh)
+
+        def shard_fn(x, ids, gates, w_gate, w_in, w_out):
+            bl, sl, _ = x.shape
+            if has_data:  # FSDP: gather expert weights over the data axis
+                w_gate = jax.lax.all_gather(w_gate, "data", axis=1,
+                                            tiled=True)
+                w_in = jax.lax.all_gather(w_in, "data", axis=1, tiled=True)
+                w_out = jax.lax.all_gather(w_out, "data", axis=2, tiled=True)
+            e_off = jax.lax.axis_index("model") * e_l
+            y = _dispatch_compute_combine(
+                x.reshape(bl * sl, d), ids.reshape(bl * sl, -1),
+                gates.reshape(bl * sl, -1),
+                w_gate.astype(cd), w_in.astype(cd), w_out.astype(cd),
+                e_off, c, cfg, cd)
+            # each token's k experts live on different model shards: combine
+            y = jax.lax.psum(y, "model")
+            return y.reshape(bl, sl, d)
+
+        y = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(bspec, None, None),
+                      P(bspec, None, None), wspec, wspec, wspec_out),
+            out_specs=P(bspec, None, None),
+            check_vma=False,
+        )(x, ids, gates, p["w_gate"], p["w_in"], p["w_out"])
+    else:
+        t_local = b * s
+        c = _capacity(t_local, cfg)
+        y = _dispatch_compute_combine(
+            x.reshape(b * s, d), ids.reshape(b * s, -1),
+            gates.reshape(b * s, -1),
+            p["w_gate"].astype(cd), p["w_in"].astype(cd),
+            p["w_out"].astype(cd), 0, c, cfg, cd)
+        y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        shared_cfg = cfg.scaled(
+            d_ff=cfg.n_shared_experts * cfg.d_expert, mlp_bias=False)
+        y = y + ffn_apply(p["shared"], x, shared_cfg, rcfg)
+
+    y = shard(y, ("batch", "res_seq", "embed_act"), rules, mesh)
+    return y.astype(x.dtype), aux

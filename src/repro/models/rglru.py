@@ -1,0 +1,187 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Real-Gated Linear Recurrent Unit is a gated leaky integrator
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) · r_t),     r_t, i_t = σ(block-diag gates)
+
+— literally a (zero-order-hold discretized) diagonal linear ODE, which is
+why this family is the paper's closest architectural relative: the
+recurrence *is* a per-channel adaptive-stepsize integrator.
+
+Training/prefill uses ``lax.associative_scan`` (log-depth on TPU);
+decode is the O(1) single-step recurrence over a carried state.
+
+Block structure (Griffin recurrent block):
+    y = W_out( GeLU(W_gate x) ⊙ RG-LRU(conv1d_4(W_x x)) )
+Gate matrices are block-diagonal with n_blocks blocks (sharded over the
+model axis along the block dim).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .common import ParamDef, dense
+from .config import ModelConfig, RunConfig
+
+PyTree = Any
+
+_C = 8.0  # Griffin's fixed gate sharpness constant
+
+
+def rglru_defs(cfg: ModelConfig, param_dtype, n_blocks: int = 16) -> PyTree:
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    bw = dr // n_blocks
+    return {
+        "w_x": ParamDef((d, dr), param_dtype, ("embed", "mlp")),
+        "w_gate": ParamDef((d, dr), param_dtype, ("embed", "mlp")),
+        "w_out": ParamDef((dr, d), param_dtype, ("mlp", "embed")),
+        "conv": ParamDef((cfg.conv_width, dr), param_dtype, ("conv", "mlp_act")),
+        "conv_b": ParamDef((dr,), param_dtype, ("mlp_act",), init="zeros"),
+        # block-diagonal recurrence / input gates
+        "w_a": ParamDef((n_blocks, bw, bw), param_dtype,
+                        ("mlp", None, None)),
+        "b_a": ParamDef((dr,), param_dtype, ("mlp_act",), init="zeros"),
+        "w_i": ParamDef((n_blocks, bw, bw), param_dtype,
+                        ("mlp", None, None)),
+        "b_i": ParamDef((dr,), param_dtype, ("mlp_act",), init="zeros"),
+        # Λ init so that a^c ≈ U[0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": ParamDef((dr,), jnp.float32, ("mlp_act",), init="normal",
+                        scale=0.5),
+    }
+
+
+def _blockdiag(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (...,D) @ block-diag(w) with w (nb, bw, bw)."""
+    nb, bw, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bw))
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(x.shape)
+
+
+def conv_tail(x: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Last w-1 positions of x (B,S,C), left-padded with zeros if S < w-1
+    — the decode-time conv state after a prefill."""
+    if w <= 1:
+        return x[:, :0]
+    s = x.shape[1]
+    tail = x[:, -min(s, w - 1):]
+    if tail.shape[1] < w - 1:
+        tail = jnp.pad(tail, ((0, 0), (w - 1 - tail.shape[1], 0), (0, 0)))
+    return tail
+
+
+def causal_conv1d(x: jnp.ndarray, kernel: jnp.ndarray,
+                  bias: Optional[jnp.ndarray] = None,
+                  state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv.  x (B,S,C); kernel (W,C); state (B,W-1,C)
+    prepends history (decode).  Returns same shape as x."""
+    w = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(w))
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+def rglru_scan(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+               lam: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray]:
+    """The RG-LRU recurrence over (B,S,C) in fp32 via associative scan.
+
+    Returns (h (B,S,C), h_last (B,C))."""
+    xf = x.astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(lam)[None, None] * r       # (B,S,C)
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) computed stably via expm1: 1-exp(2 log_a)
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = b_scale * (i * xf)
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block_apply(
+    p: PyTree,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    rcfg: RunConfig,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Griffin recurrent block.  x (B,S,D) -> (y (B,S,D), new_cache)."""
+    cd = rcfg.compute_dtype
+    mesh, rules = rcfg.mesh, rcfg.rules
+    b, s, _ = x.shape
+
+    gate = jax.nn.gelu(dense(x, p["w_gate"], None, cd))
+    gate = shard(gate, ("batch", "seq", "mlp_act"), rules, mesh)
+    u_raw = dense(x, p["w_x"], None, cd)       # pre-conv (cached for decode)
+    u_raw = shard(u_raw, ("batch", "seq", "mlp_act"), rules, mesh)
+
+    conv_state = cache["conv"] if cache is not None else None
+    u = causal_conv1d(u_raw, p["conv"], p["conv_b"], state=conv_state)
+
+    r = jax.nn.sigmoid(
+        _blockdiag(u.astype(jnp.float32), p["w_a"].astype(jnp.float32))
+        + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        _blockdiag(u.astype(jnp.float32), p["w_i"].astype(jnp.float32))
+        + p["b_i"].astype(jnp.float32))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        h_prev = cache["h"]                               # (B, Dr)
+        log_a = -_C * jax.nn.softplus(p["lam"])[None] * r[:, 0]
+        a = jnp.exp(log_a)
+        bsc = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+        h_new = a * h_prev.astype(jnp.float32) + bsc * (
+            i[:, 0] * u[:, 0].astype(jnp.float32))
+        h = h_new[:, None].astype(cd)
+        w = p["conv"].shape[0]
+        conv_new = jnp.concatenate(
+            [cache["conv"][:, 1:], u_raw.astype(cache["conv"].dtype)],
+            axis=1) if w > 1 else cache["conv"]
+        new_cache = {"conv": conv_new, "h": h_new}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        h, h_last = rglru_scan(u, r, i, p["lam"], h0=h0)
+        if mode == "prefill":
+            w = p["conv"].shape[0]
+            conv_new = conv_tail(u_raw, w).astype(jnp.float32)
+            new_cache = {"conv": conv_new, "h": h_last}
+
+    y = dense(gate * h.astype(cd), p["w_out"], None, cd)
+    y = shard(y, ("batch", "res_seq", "embed_act"), rules, mesh)
+    return y, new_cache
+
+
+def rglru_cache_defs(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    dr = cfg.resolved_d_rnn
+    return {
+        "conv": ParamDef((batch, cfg.conv_width - 1, dr), jnp.float32,
+                         ("batch", None, "mlp_act"), init="zeros"),
+        "h": ParamDef((batch, dr), jnp.float32, ("batch", "mlp_act"),
+                      init="zeros"),
+    }

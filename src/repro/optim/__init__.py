@@ -1,0 +1,16 @@
+"""repro.optim — optimizers, schedules, gradient utilities (no optax)."""
+
+from .adamw import adamw
+from .sgd import sgd
+from .schedule import (constant, cosine_warmup, exponential_decay,
+                       step_decay)
+from .grad_utils import (clip_by_global_norm, global_norm,
+                         int8_compress_decompress, topk_sparsify,
+                         CompressionState)
+
+__all__ = [
+    "adamw", "sgd",
+    "constant", "cosine_warmup", "exponential_decay", "step_decay",
+    "clip_by_global_norm", "global_norm",
+    "int8_compress_decompress", "topk_sparsify", "CompressionState",
+]

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay (Loshchilov & Hutter).
+
+Functional optax-style interface:
+
+    opt = adamw(lr_schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Moments are stored in fp32 regardless of parameter dtype.  Under the
+2-D (FSDP × TP) parameter sharding, moment trees inherit the parameter
+PartitionSpecs — ZeRO: optimizer state is fully sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], Any]
+    update: Callable[..., Tuple[PyTree, Any]]
+
+
+def _sched_value(s: Schedule, step) -> jnp.ndarray:
+    return s(step) if callable(s) else jnp.asarray(s, jnp.float32)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          mask: Callable[[PyTree], PyTree] = None) -> Optimizer:
+    """``mask(params)`` -> bool tree selects which leaves get decay
+    (default: every leaf with ndim >= 2 — biases/norms are excluded)."""
+
+    def default_mask(params):
+        return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    decay_mask = mask or default_mask
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _sched_value(lr, step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, n):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            n2 = b2 * n + (1 - b2) * gf * gf
+            return m2, n2
+
+        mn = jax.tree.map(upd, grads, state.mu, state.nu)
+        mu = jax.tree.map(lambda x: x[0], mn,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda x: x[1], mn,
+                          is_leaf=lambda x: isinstance(x, tuple))
+
+        wd_tree = decay_mask(params)
+
+        def step_fn(m, n, p, use_wd):
+            u = -(lr_t * ((m / c1) / (jnp.sqrt(n / c2) + eps)))
+            if weight_decay:
+                u = u - lr_t * weight_decay * jnp.where(
+                    use_wd, p.astype(jnp.float32), 0.0)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(step_fn, mu, nu, params, wd_tree)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)

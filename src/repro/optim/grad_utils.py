@@ -1,0 +1,103 @@
+"""Gradient utilities: clipping, compression (with error feedback).
+
+Gradient compression reduces the *data-parallel all-reduce* volume — the
+cross-pod (DCN) traffic in the multi-pod mesh.  Two schemes:
+
+* ``int8_compress_decompress`` — per-tensor symmetric int8 quantization
+  with error feedback (the quantization residual is carried to the next
+  step, keeping SGD unbiased in the long run): 4× DCN volume reduction.
+* ``topk_sparsify`` — keep the top-k fraction by magnitude, accumulate
+  the rest in the error buffer (Deep Gradient Compression style).
+
+Both run as quantize→(all-reduce)→dequantize transforms around the
+optimizer; on a real multi-pod deployment the int8 all-reduce happens in
+the compressed domain via a custom reducer — here the compression math
+and error-feedback state machine are what the tests exercise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+class CompressionState(NamedTuple):
+    error: PyTree          # error-feedback residual, fp32
+
+
+def init_compression_state(grads: PyTree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                           grads))
+
+
+def int8_compress_decompress(
+    grads: PyTree,
+    state: Optional[CompressionState] = None,
+) -> Tuple[PyTree, CompressionState]:
+    """Symmetric per-tensor int8 quantize→dequantize with error feedback.
+
+    Returns (decompressed grads, new state).  The int8 payload +
+    per-tensor fp32 scale is what would cross the DCN.
+    """
+    if state is None:
+        state = init_compression_state(grads)
+
+    def comp(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.abs(gf).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    pairs = jax.tree.map(comp, grads, state.error)
+    out = jax.tree.map(lambda x: x[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda x: x[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return out, CompressionState(error=err)
+
+
+def topk_sparsify(
+    grads: PyTree,
+    frac: float,
+    state: Optional[CompressionState] = None,
+) -> Tuple[PyTree, CompressionState]:
+    """Keep the top ``frac`` of entries per tensor (by |value|); the rest
+    accumulates in the error buffer."""
+    if state is None:
+        state = init_compression_state(grads)
+
+    def comp(g, e):
+        gf = g.astype(jnp.float32) + e
+        flat = jnp.abs(gf).reshape(-1)
+        k = max(int(flat.size * frac), 1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(gf) >= thresh
+        kept = jnp.where(mask, gf, 0.0)
+        return kept.astype(g.dtype), gf - kept
+
+    pairs = jax.tree.map(comp, grads, state.error)
+    out = jax.tree.map(lambda x: x[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda x: x[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return out, CompressionState(error=err)

@@ -1,0 +1,46 @@
+"""Learning-rate schedules (step functions of the int32 step counter)."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, boundaries: Sequence[int], factor: float = 0.1):
+    """The paper's schedule: decay by ``factor`` at each boundary epoch."""
+    bs = jnp.asarray(list(boundaries), jnp.int32)
+
+    def f(step):
+        n = (step >= bs).sum()
+        return jnp.asarray(lr, jnp.float32) * factor ** n
+
+    return f
+
+
+def exponential_decay(lr: float, decay: float):
+    """lr · decay^step (the paper's three-body experiments, Eq. 83)."""
+    def f(step):
+        return jnp.asarray(lr, jnp.float32) * decay ** step.astype(
+            jnp.float32)
+    return f
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac·peak (LM training)."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (
+            1 + jnp.cos(math.pi * t))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+    return f

@@ -1,0 +1,48 @@
+"""SGD with (Nesterov) momentum — the optimizer of the paper's image
+classification experiments (Sec. 4.2)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer, Schedule, _sched_value
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    velocity: PyTree
+
+
+def sgd(lr: Schedule, momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _sched_value(lr, step)
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            v2 = momentum * v + gf
+            d = gf + momentum * v2 if nesterov else v2
+            return (-lr_t * d).astype(p.dtype), v2
+
+        pairs = jax.tree.map(upd, grads, state.velocity, params)
+        updates = jax.tree.map(lambda x: x[0], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        vel = jax.tree.map(lambda x: x[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return updates, SGDState(step=step, velocity=vel)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,5 @@
+"""repro.serve — batched prefill + decode serving engine."""
+
+from .engine import ServeEngine, ServeConfig
+
+__all__ = ["ServeEngine", "ServeConfig"]

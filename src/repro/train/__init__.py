@@ -1,0 +1,7 @@
+"""repro.train — train state, step builder, fault-tolerant loop."""
+
+from .state import TrainState, make_train_state
+from .loop import TrainLoop, TrainLoopConfig, build_train_step
+
+__all__ = ["TrainState", "make_train_state", "TrainLoop",
+           "TrainLoopConfig", "build_train_step"]

@@ -1,0 +1,65 @@
+"""TrainState: params + optimizer state + step, with sharding specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lm import Model
+from repro.optim.adamw import Optimizer
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: PyTree
+    opt_state: Any
+
+
+def make_train_state(model: Model, opt: Optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=opt.init(params))
+
+
+def abstract_train_state(model: Model, opt: Optimizer) -> TrainState:
+    """ShapeDtypeStruct TrainState — dry-run lowering, zero allocation."""
+    params = model.abstract()
+    opt_state = jax.eval_shape(opt.init, params)
+    return TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      params=params, opt_state=opt_state)
+
+
+def train_state_specs(model: Model, opt: Optimizer,
+                      mesh=None) -> TrainState:
+    """PartitionSpec tree matching TrainState (ZeRO: moments follow the
+    parameter sharding — fully sharded optimizer state)."""
+    pspecs = model.specs(mesh)
+    abstract = abstract_train_state(model, opt)
+
+    def like_params(opt_state):
+        # moment trees mirror params; scalars replicate
+        flat_p, treedef_p = jax.tree.flatten(pspecs)
+
+        def map_node(node):
+            return node
+        # walk the opt_state: any subtree isomorphic to params gets pspecs
+        def rec(o):
+            if isinstance(o, tuple) and hasattr(o, "_fields"):
+                return type(o)(*(rec(v) for v in o))
+            try:
+                if jax.tree.structure(o) == jax.tree.structure(pspecs):
+                    return pspecs
+            except Exception:
+                pass
+            return jax.tree.map(lambda _: P(), o)
+
+        return rec(opt_state)
+
+    return TrainState(step=P(), params=pspecs,
+                      opt_state=like_params(abstract.opt_state))

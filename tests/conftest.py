@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 CPU device; only launch/dryrun.py forces 512 placeholders."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, B=2, S=16, seed=0):
+    if cfg.frontend != "none":
+        from repro.models.frontends import frontend_batch_synthetic
+        return frontend_batch_synthetic(cfg, B, S, jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed)
+    t = jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)
+    return {"tokens": t, "labels": jnp.roll(t, -1, axis=1),
+            "mask": jnp.ones((B, S), jnp.float32)}

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+and one train step on CPU, asserting output shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see repro.launch.dryrun.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_batch
+from repro.configs import ARCHS, get_config, get_smoke_config, shape_plan
+from repro.models import RunConfig, build_model
+from repro.optim import adamw, constant
+from repro.train.loop import TrainLoopConfig, build_train_step
+from repro.train.state import make_train_state
+from repro.optim.grad_utils import CompressionState
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg, RunConfig(compute_dtype=jnp.float32))
+    batch = tiny_batch(cfg, B=2, S=16)
+
+    logits, _, aux = m.forward(m.init(jax.random.PRNGKey(0)), batch,
+                               mode="train")
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+    opt = adamw(constant(1e-3))
+    step = build_train_step(m, opt, TrainLoopConfig())
+    state = make_train_state(m, opt, jax.random.PRNGKey(1))
+    state2, _, metrics = step(state, batch, CompressionState(error=()))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state2.step) == 1
+    # parameters actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state2.params)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dims_match_assignment(arch):
+    """The registry exposes the exact published dims."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen1_5_32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen2_72b": (80, 8192, 64, 8, 29568, 152064),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+        "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "mamba2_2_7b": (64, 2560, 0, 0, 0, 50280),
+        "node18_cifar": (18, 768, 12, 12, 3072, 32768),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, (arch, got, expected)
+
+
+def test_moe_configs():
+    c = get_config("deepseek_moe_16b")
+    assert (c.n_experts, c.n_shared_experts, c.top_k) == (64, 2, 6)
+    c = get_config("qwen3_moe_235b_a22b")
+    assert (c.n_experts, c.n_shared_experts, c.top_k) == (128, 0, 8)
+    assert c.resolved_head_dim == 128
+
+
+def test_mamba_dims():
+    c = get_config("mamba2_2_7b")
+    assert c.ssm_state == 128 and c.d_inner == 5120 and c.ssm_heads == 80
+
+
+def test_shape_plan_skips():
+    # full-attention archs skip long_500k; ssm/hybrid run it
+    assert shape_plan("qwen2_72b", "long_500k") is None
+    assert shape_plan("command_r_plus_104b", "long_500k") is None
+    assert shape_plan("mamba2_2_7b", "long_500k") == (524288, 1, "decode")
+    assert shape_plan("recurrentgemma_9b", "long_500k") is not None
+    assert shape_plan("qwen2_72b", "train_4k") == (4096, 256, "train")
+    assert shape_plan("qwen2_72b", "decode_32k")[2] == "decode"
+
+
+def test_recurrentgemma_stack_plan():
+    from repro.models.transformer import stack_plan
+    cfg = get_config("recurrentgemma_9b")
+    unit, groups, tail = stack_plan(cfg)
+    assert unit == ("rec", "rec", "attn")
+    assert groups == 12 and tail == ["rec", "rec"]
+    assert groups * len(unit) + len(tail) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ["qwen2_72b", "deepseek_moe_16b",
+                                  "mamba2_2_7b"])
+def test_param_count_sane(arch):
+    """Full-config parameter count is within 20% of the advertised size
+    (embedding tables and norm params account for the slack)."""
+    import re
+    cfg = get_config(arch)
+    m = build_model(cfg, RunConfig())
+    n = m.n_params()
+    advertised = {"qwen2_72b": 72e9, "deepseek_moe_16b": 16e9,
+                  "mamba2_2_7b": 2.7e9}[arch]
+    assert 0.75 * advertised < n < 1.35 * advertised, (arch, n)

@@ -1,0 +1,132 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the ref.py pure-jnp oracles.
+
+All kernels run in interpret mode (the kernel body executes in Python on
+CPU); on a TPU backend the same calls compile natively.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tableaus import BOGACKI_SHAMPINE, DOPRI5, HEUN_EULER, RK4
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+# ----------------------------------------------------------------- rk_stage
+@pytest.mark.parametrize("tab", [HEUN_EULER, BOGACKI_SHAMPINE, DOPRI5, RK4])
+@pytest.mark.parametrize("n", [37, 1000, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rk_stage_combine(tab, n, dtype):
+    key = jax.random.PRNGKey(n)
+    z = jax.random.normal(key, (n,)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(n + 1),
+                          (tab.stages, n)).astype(dtype)
+    h = jnp.float32(0.05)
+    o1, e1 = ops.rk_stage_combine(z, k, h, tab.b, tab.b_err, block=512)
+    o2, e2 = ref.rk_stage_combine_ref(z, k, h, tab.b, tab.b_err)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape", [(4, 64), (3, 17, 128), (2, 5, 7, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+    r1 = ops.rmsnorm(x, w, rows=8)
+    r2 = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(r1, np.float32),
+                               np.asarray(r2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(hkv, s, bq, bk, dtype):
+    B, H, D = 2, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (B, H, s, D)) * 0.4).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, hkv, s, D)) * 0.4).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, hkv, s, D)) * 0.4).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_windowed(window):
+    B, H, HKV, S, D = 1, 2, 1, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D)) * 0.4
+    k = jax.random.normal(ks[1], (B, HKV, S, D)) * 0.4
+    v = jax.random.normal(ks[2], (B, HKV, S, D)) * 0.4
+    out = ops.flash_attention(q, k, v, window=window, block_q=64,
+                              block_k=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32)])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_scan(s, chunk, g):
+    B, H, P, N = 2, 4, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, s, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    bm = jax.random.normal(ks[3], (B, s, g, N)) * 0.5
+    cm = jax.random.normal(ks[4], (B, s, g, N)) * 0.5
+    out = ops.ssd_scan(x, dt, a, bm, cm, chunk)
+    want = ref.ssd_scan_ref(x, dt, a, bm, cm, chunk)
+    seq = ref.ssd_scan_sequential_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # the chunked algorithm itself equals the O(S) sequential SSM
+    np.testing.assert_allclose(np.asarray(want), np.asarray(seq),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- rg_lru
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 64)])
+@pytest.mark.parametrize("c,ct", [(32, 32), (64, 32)])
+def test_rg_lru(s, chunk, c, ct):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (2, s, c)))
+    b = jax.random.normal(ks[1], (2, s, c))
+    out = ops.rg_lru(log_a, b, chunk=chunk, c_tile=ct)
+    want = ref.rg_lru_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rg_lru_strong_decay_stability():
+    """The log-clamped closed form must not produce inf/nan under decay
+    strong enough to underflow the naive cumprod."""
+    s, c = 256, 16
+    log_a = jnp.full((1, s, c), -2.0)     # a = e^-2: cumprod -> e^-512
+    b = jnp.ones((1, s, c))
+    out = ops.rg_lru(log_a, b, chunk=64, c_tile=16)
+    want = ref.rg_lru_ref(log_a, b)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

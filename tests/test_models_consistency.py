@@ -1,0 +1,145 @@
+"""prefill → decode must reproduce the full-forward logits (KV caches,
+ring buffers, SSM/conv states) and NODE mode must train for every
+grad method."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_batch
+from repro.core import NodeConfig
+from repro.models import ModelConfig, RunConfig, build_model
+
+CONFIGS = {
+    "dense-gqa": ModelConfig(
+        name="t", family="dense", n_layers=3, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, d_ff=128, qkv_bias=True),
+    "dense-parallel-tied": ModelConfig(
+        name="t", family="dense", n_layers=2, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=2, d_ff=128, parallel_block=True,
+        tie_embeddings=True, norm="layernorm"),
+    "hybrid-window": ModelConfig(
+        name="t", family="hybrid", n_layers=8, d_model=64, vocab=128,
+        n_heads=4, n_kv_heads=1, d_ff=128, window=8,
+        pattern=("rec", "rec", "attn"), d_rnn=64),
+    "ssm": ModelConfig(
+        name="t", family="ssm", n_layers=3, d_model=64, vocab=128,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_prefill_decode_matches_forward(name):
+    cfg = CONFIGS[name]
+    S, NEW = 16, 3
+    m = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                   max_seq=S + NEW + 4))
+    params = m.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, S + NEW), 0,
+                              cfg.vocab, jnp.int32)
+    full, _, _ = m.forward(params, {"tokens": toks}, mode="train")
+
+    last, caches = m.prefill(params, {"tokens": toks[:, :S]})
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(full[:, S - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for j in range(NEW):
+        lg, caches = m.decode_step(
+            params, {"tokens": toks[:, S + j:S + j + 1]}, caches,
+            jnp.asarray(S + j, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, S + j]),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_windowed_decode_beyond_window():
+    """Ring-buffer decode stays consistent once the cache wraps."""
+    cfg = CONFIGS["hybrid-window"]          # window = 8
+    S, NEW = 12, 6                          # decode positions 12..17 wrap
+    m = build_model(cfg, RunConfig(compute_dtype=jnp.float32, max_seq=32))
+    params = m.init(jax.random.PRNGKey(2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, S + NEW), 0,
+                              cfg.vocab, jnp.int32)
+    full, _, _ = m.forward(params, {"tokens": toks}, mode="train")
+    _, caches = m.prefill(params, {"tokens": toks[:, :S]})
+    for j in range(NEW):
+        lg, caches = m.decode_step(
+            params, {"tokens": toks[:, S + j:S + j + 1]}, caches,
+            jnp.asarray(S + j, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, S + j]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("regime,gm", [("fixed", "aca"),
+                                       ("adaptive", "aca"),
+                                       ("fixed", "adjoint"),
+                                       ("fixed", "naive")])
+def test_node_mode_trains(regime, gm):
+    cfg = CONFIGS["dense-gqa"]
+    node = NodeConfig(enabled=True, regime=regime, grad_method=gm,
+                      steps_per_interval=2, max_steps=16)
+    m = build_model(cfg, RunConfig(compute_dtype=jnp.float32, node=node))
+    params = m.init(jax.random.PRNGKey(1))
+    batch = tiny_batch(cfg)
+    (loss, _), grads = jax.value_and_grad(m.loss_fn, has_aux=True)(
+        params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+def test_node_mode_param_count_unchanged():
+    """Eq. 30→31: the NODE transform preserves the parameter count."""
+    cfg = CONFIGS["dense-gqa"]
+    m_disc = build_model(cfg, RunConfig())
+    m_node = build_model(cfg, RunConfig(
+        node=NodeConfig(enabled=True, regime="fixed")))
+    assert m_disc.n_params() == m_node.n_params()
+
+
+def test_node_fixed_aca_equals_naive_gradient():
+    """Fixed-grid NODE: ACA and naive differentiate the same discrete
+    solution -> near-identical model gradients."""
+    cfg = CONFIGS["dense-gqa"]
+    batch = tiny_batch(cfg)
+    grads = {}
+    for gm in ("aca", "naive"):
+        node = NodeConfig(enabled=True, regime="fixed", grad_method=gm,
+                          steps_per_interval=2)
+        m = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                       node=node))
+        params = m.init(jax.random.PRNGKey(1))
+        _, g = jax.value_and_grad(m.loss_fn, has_aux=True)(params, batch)
+        grads[gm] = g
+    for a, b in zip(jax.tree.leaves(grads["aca"]),
+                    jax.tree.leaves(grads["naive"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_scan_vs_unrolled_stack_identical():
+    cfg = CONFIGS["dense-gqa"]
+    batch = tiny_batch(cfg)
+    m1 = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                    scan_layers=True))
+    m2 = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                    scan_layers=False))
+    params = m1.init(jax.random.PRNGKey(1))
+    l1, _ = m1.loss_fn(params, batch)
+    l2, _ = m2.loss_fn(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_remat_matches_no_remat():
+    cfg = CONFIGS["dense-gqa"]
+    batch = tiny_batch(cfg)
+    m1 = build_model(cfg, RunConfig(compute_dtype=jnp.float32))
+    m2 = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                    remat="block"))
+    params = m1.init(jax.random.PRNGKey(1))
+    g1 = jax.grad(lambda p: m1.loss_fn(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: m2.loss_fn(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,69 @@
+"""Solver tableau validation + empirical convergence order.
+
+A solver of order p must show error ~ C·h^p on a smooth ODE: halving h
+divides the error by ~2^p.  This pins every tableau to its advertised
+order — a transcription error in any coefficient fails these tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed_grid_solve, get_tableau
+from repro.core.tableaus import (ADAPTIVE_SOLVERS, FIXED_SOLVERS,
+                                 _REGISTRY)
+
+
+@pytest.mark.parametrize("name", sorted(_REGISTRY))
+def test_tableau_consistency(name):
+    get_tableau(name).validate()
+
+
+def _solve_err(tab, steps):
+    """Error of z' = z·cos(t), z(0)=1 (exact: exp(sin t)) at T=2."""
+    def f(t, z):
+        return z * jnp.cos(t)
+
+    ts = jnp.array([0.0, 2.0])
+    ys, _ = fixed_grid_solve(tab, f, jnp.float64(1.0)
+                             if jax.config.jax_enable_x64
+                             else jnp.float32(1.0),
+                             ts, (), steps)
+    exact = float(np.exp(np.sin(2.0)))
+    return abs(float(ys[-1]) - exact)
+
+
+@pytest.mark.parametrize("name,order", [
+    ("euler", 1), ("midpoint", 2), ("rk2", 2), ("rk4", 4),
+    ("heun_euler", 2), ("bosh3", 3), ("dopri5", 5),
+])
+def test_convergence_order(name, order):
+    tab = get_tableau(name)
+    # pick step counts where error is well above fp32 noise
+    n0 = {1: 64, 2: 16, 3: 8, 4: 4, 5: 2}[order]
+    e1 = _solve_err(tab, n0)
+    e2 = _solve_err(tab, 2 * n0)
+    rate = np.log2(max(e1, 1e-12) / max(e2, 1e-12))
+    # allow generous slack (fp32, low-order error terms)
+    assert rate > order - 0.7, (name, rate, order, e1, e2)
+
+
+@pytest.mark.parametrize("name", ADAPTIVE_SOLVERS)
+def test_embedded_error_nonzero(name):
+    tab = get_tableau(name)
+    assert tab.adaptive
+    assert any(abs(x) > 0 for x in tab.b_err)
+
+
+def test_fsal_flags():
+    assert get_tableau("dopri5").fsal
+    assert get_tableau("bosh3").fsal
+    assert not get_tableau("heun_euler").fsal
+
+
+def test_registry_aliases():
+    assert get_tableau("rk45") is get_tableau("dopri5")
+    assert get_tableau("rk23") is get_tableau("bosh3")
+    with pytest.raises(KeyError):
+        get_tableau("nope")
