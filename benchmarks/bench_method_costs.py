@@ -5,10 +5,22 @@ Measured quantities (CPU wall-time is indicative; the asymptotics are
 the claim):
   * NFE — forward f evaluations (solver stats),
   * grad wall-time — one jit-compiled value_and_grad call,
-  * residual bytes — size of the saved-for-backward buffers, read from
-    the compiled HLO (the dominant memory term of each method):
-    naive stores O(N_f·N_t·m) stage intermediates, adjoint O(N_f),
-    ACA O(N_f + N_t) checkpoints."""
+  * residual bytes — ``analyze_hlo`` over the compiled value_and_grad
+    HLO: ``bytes_min`` counts only the algorithm-intrinsic memory
+    traffic (dots, fusions, dynamic-update-slices of the
+    saved-for-backward buffers), the dominant memory term of each
+    method: naive stores O(N_f·N_t·m) stage intermediates, adjoint
+    O(N_f), ACA O(N_f + N_t) checkpoints.
+
+The ACA row is additionally measured with ``use_pallas=True``
+(``aca_pallas``) so the fused flat-state stepper's wall-time and
+traffic delta versus the pytree path lands in ``BENCH_*.json``.
+NOTE: on CPU the kernels run in *interpret mode* (each pallas_call
+lowers to many plain XLA ops), so the aca_pallas row validates
+dispatch and parity only — its bytes/wall-time read HIGHER than aca
+there.  The fused traffic cut is a property of TPU compilation; rerun
+on a TPU backend for the real delta.
+"""
 
 from __future__ import annotations
 
@@ -31,26 +43,43 @@ def run(quick: bool = False):
     w1 = jax.random.normal(key, (D, D)) * 0.4
     w2 = jax.random.normal(jax.random.PRNGKey(1), (D, D)) * 0.4
     z0 = jax.random.normal(jax.random.PRNGKey(2), (32, D))
+    max_steps = 32 if quick else 64
+    reps = 1 if quick else 3
 
-    for method in ("aca", "adjoint", "naive"):
+    variants = [("aca", False), ("adjoint", False), ("naive", False),
+                ("aca_pallas", True)]
+    for label, use_pallas in variants:
+        method = label.split("_")[0]
+
         def loss(w1, w2):
             ys, stats = odeint(
                 _f, z0, jnp.array([0.0, 1.0]), (w1, w2),
                 solver="dopri5", grad_method=method,
-                rtol=1e-5, atol=1e-5, max_steps=64, max_trials=8)
+                rtol=1e-5, atol=1e-5, max_steps=max_steps, max_trials=8,
+                use_pallas=use_pallas)
             return (ys[-1] ** 2).mean(), stats
 
+        # AOT-compile once: the timed calls and the HLO analysis share
+        # the same executable (naive's trial-budget trace is expensive)
         g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1),
-                                       has_aux=True))
+                                       has_aux=True)).lower(w1, w2).compile()
         (val, stats), grads = g(w1, w2)
-        emit(f"table1_nfe/{method}", int(stats.nfe),
+        emit(f"table1_nfe/{label}", int(stats.nfe),
              "forward f evals (N_f x N_t x m structure)")
-        dt = timed(lambda: g(w1, w2), n=3)
-        emit(f"table1_grad_walltime_ms/{method}", f"{dt * 1e3:.1f}",
+        dt = timed(lambda: g(w1, w2), n=reps)
+        emit(f"table1_grad_walltime_ms/{label}", f"{dt * 1e3:.1f}",
              "jit value_and_grad, CPU")
-        emit(f"table1_accepted_steps/{method}", int(stats.n_steps),
+        emit(f"table1_accepted_steps/{label}", int(stats.n_steps),
              "N_t")
+        cost = analyze_hlo(g.as_text())
+        emit(f"table1_residual_bytes/{label}", int(cost.bytes_min),
+             "analyze_hlo bytes_min of value_and_grad HLO "
+             "(saved-buffer + intrinsic traffic)")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

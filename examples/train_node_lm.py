@@ -12,15 +12,22 @@ aca/adjoint/naive.
 
     PYTHONPATH=src python examples/train_node_lm.py --steps 300
     PYTHONPATH=src python examples/train_node_lm.py --smoke --steps 50
+    PYTHONPATH=src python examples/train_node_lm.py --smoke --adaptive
+
+``--adaptive`` trains with the paper-matching ``NODE_TRAIN`` config
+(adaptive HeunEuler, rtol=atol=1e-2, ACA, fused Pallas solver path)
+instead of the CPU-friendly fixed grid.
 """
 
 import argparse
+import dataclasses
 import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.configs.node18_cifar import NODE_TRAIN
 from repro.core import NodeConfig
 from repro.data import TokenPipeline
 from repro.models import RunConfig, build_model
@@ -35,6 +42,9 @@ def main():
     ap.add_argument("--discrete", action="store_true")
     ap.add_argument("--grad-method", default="aca",
                     choices=["aca", "adjoint", "naive"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="paper-matching adaptive NODE_TRAIN config "
+                         "(HeunEuler 1e-2, fused Pallas solver)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_node_lm")
@@ -42,9 +52,13 @@ def main():
 
     cfg = get_smoke_config("node18_cifar") if args.smoke \
         else get_config("node18_cifar")
-    node = NodeConfig(enabled=not args.discrete, regime="fixed",
-                      solver="rk2", grad_method=args.grad_method,
-                      steps_per_interval=2)
+    if args.adaptive:
+        node = dataclasses.replace(NODE_TRAIN, enabled=not args.discrete,
+                                   grad_method=args.grad_method)
+    else:
+        node = NodeConfig(enabled=not args.discrete, regime="fixed",
+                          solver="rk2", grad_method=args.grad_method,
+                          steps_per_interval=2)
     rcfg = RunConfig(compute_dtype=jnp.float32 if args.smoke
                      else jnp.bfloat16, node=node, remat="none")
     model = build_model(cfg, rcfg)

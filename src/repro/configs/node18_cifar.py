@@ -9,9 +9,23 @@ the very same stack the LM archs use — this is the config the NODE-mode
 dry-run rows lower.
 
 ``CONFIG`` is a ~100M-param continuous-depth LM; ``SMOKE`` the reduced
-version.  NODE mode itself is switched on through ``RunConfig.node``."""
+version.  NODE mode itself is switched on through ``RunConfig.node``;
+``NODE_TRAIN`` is the paper-matching NodeConfig for this arch (HeunEuler,
+rtol=atol=1e-2, ACA) with the fused flat-state Pallas solver path on —
+on TPU the per-trial stage combine + error norm run as fused kernels,
+elsewhere they run in interpret mode."""
 
+from repro.core.node_block import NodeConfig
 from repro.models.config import ModelConfig
+
+NODE_TRAIN = NodeConfig(
+    enabled=True,
+    solver="heun_euler",
+    grad_method="aca",
+    rtol=1e-2,
+    atol=1e-2,
+    use_pallas=True,
+)
 
 CONFIG = ModelConfig(
     name="node18-cifar",

@@ -5,7 +5,8 @@
                        grad_method="aca",        # aca | adjoint | naive
                        rtol=1e-6, atol=1e-6,
                        max_steps=256,            # checkpoint capacity
-                       steps_per_interval=8)     # fixed-grid solvers
+                       steps_per_interval=8,     # fixed-grid solvers
+                       use_pallas=False)         # fused flat-state kernels
 
 ``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` sorted ascending,
 ``ys[k] = z(ts[k])`` with ``ys[0] = z0``.  Gradients flow to ``z0`` and
@@ -45,7 +46,23 @@ def odeint(
     max_trials: int = 12,
     steps_per_interval: int = 8,
     trial_budget: Optional[int] = None,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
+    """See module docstring for the solver × grad-method matrix.
+
+    ``use_pallas=True`` enables the fused flat-state fast path: the
+    state pytree is raveled once per solve and every ψ trial (stage
+    increments, solution/error combine, scaled error norm) runs as
+    fused Pallas kernels — compiled on TPU, interpret-mode elsewhere
+    (``repro.kernels.ops.set_interpret`` / REPRO_PALLAS_INTERPRET
+    override).  The fused step computes the same f32 arithmetic in the
+    same accumulation order as the pytree path (bit-identical in the
+    tested configurations; only the error-norm reduction is tiled, so a
+    trial whose scaled error sits within ~1 ulp of the accept threshold
+    could in principle decide differently) and gradients flow through
+    all three methods.  States whose leaves mix dtypes (or are not
+    inexact) silently fall back to the pytree path.
+    """
     tab = get_tableau(solver) if isinstance(solver, str) else solver
     ts = jnp.asarray(ts)
     if ts.ndim != 1 or ts.shape[0] < 2:
@@ -58,21 +75,25 @@ def odeint(
     if tab.adaptive:
         if grad_method == "aca":
             return odeint_aca(f, z0, ts, args, solver=tab, rtol=rtol,
-                              atol=atol, cfg=cfg)
+                              atol=atol, cfg=cfg, use_pallas=use_pallas)
         if grad_method == "adjoint":
             return odeint_adjoint(f, z0, ts, args, solver=tab, rtol=rtol,
-                                  atol=atol, cfg=cfg)
+                                  atol=atol, cfg=cfg, use_pallas=use_pallas)
         return odeint_naive(f, z0, ts, args, solver=tab, rtol=rtol,
-                            atol=atol, cfg=cfg, trial_budget=trial_budget)
+                            atol=atol, cfg=cfg, trial_budget=trial_budget,
+                            use_pallas=use_pallas)
 
     if grad_method == "aca":
         return odeint_aca_fixed(f, z0, ts, args, solver=tab,
-                                steps_per_interval=steps_per_interval)
+                                steps_per_interval=steps_per_interval,
+                                use_pallas=use_pallas)
     if grad_method == "adjoint":
         return odeint_adjoint_fixed(f, z0, ts, args, solver=tab,
-                                    steps_per_interval=steps_per_interval)
+                                    steps_per_interval=steps_per_interval,
+                                    use_pallas=use_pallas)
     return odeint_naive_fixed(f, z0, ts, args, solver=tab,
-                              steps_per_interval=steps_per_interval)
+                              steps_per_interval=steps_per_interval,
+                              use_pallas=use_pallas)
 
 
 def odeint_final(

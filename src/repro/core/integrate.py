@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
-from .stepper import error_ratio, rk_step
+from .stepper import error_ratio, maybe_flatten, rk_step
 from .tableaus import Tableau
 
 PyTree = Any
@@ -62,10 +62,6 @@ def _buffer_set(buf: PyTree, i, val: PyTree) -> PyTree:
     return jax.tree.map(lambda b, v: b.at[i].set(v), buf, val)
 
 
-def _buffer_get(buf: PyTree, i) -> PyTree:
-    return jax.tree.map(lambda b: b[i], buf)
-
-
 def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
@@ -80,12 +76,19 @@ def adaptive_while_solve(
     atol: float,
     cfg: ControllerConfig,
     h0: Optional[jnp.ndarray] = None,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Integrate dz/dt = f(t, z, *args) through increasing times ``ts``.
 
     Returns (ys, checkpoints, stats); ``ys`` is stacked over len(ts) with
     ys[0] = z0.  Not reverse-differentiable (while_loop) — wrap in
     custom_vjp (ACA / adjoint) or use only for inference.
+
+    ``use_pallas`` selects the fused flat-state stepper path; callers
+    pass an already-flat (N,) state (see ``stepper.flatten_problem``) —
+    the trial step and its error norm then run as fused Pallas kernels
+    and the while_loop carry/checkpoint buffers hold one flat array per
+    slot.  Non-flat states silently use the pytree stepper.
     """
     n_eval = ts.shape[0]
     tdt = ts.dtype
@@ -133,11 +136,15 @@ def adaptive_while_solve(
         # clamp trial step to land exactly on the next eval time
         h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
         h_use = jnp.clip(h, h_min, t_target - t)
-        res = rk_step(tab, f, t, z, h_use, args, k0=c["k0"])
+        res = rk_step(tab, f, t, z, h_use, args, k0=c["k0"],
+                      use_pallas=use_pallas,
+                      err_scale=(rtol, atol) if tab.adaptive else None)
         nfe = c["nfe"] + (tab.stages - 1)
 
         if tab.adaptive:
-            ratio = error_ratio(res.err, z, res.z_next, rtol, atol)
+            # fused path: the scaled norm came out of the combine kernel
+            ratio = res.err_ratio if res.err_ratio is not None else \
+                error_ratio(res.err, z, res.z_next, rtol, atol)
             # forced-minimum steps are always accepted (cannot shrink further)
             accept = (ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3))
         else:
@@ -230,18 +237,27 @@ def fixed_grid_solve(
     ts: jnp.ndarray,
     args: Tuple,
     steps_per_interval: int,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Differentiable fixed-grid integration via ``lax.scan``.
 
     Outputs at every ``ts``; ys[0] = z0.  Reverse-mode AD through the scan
     is the naive method for fixed-step solvers.
+
+    ``use_pallas`` ravels the state once (``stepper.flatten_problem``)
+    and runs every step through the fused flat-state kernels; the
+    unravel is applied to the stacked outputs.  Fully differentiable —
+    the flatten/unravel are plain jnp reshapes on the AD path.
     """
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
+
     t_grid, h_grid = make_fixed_grid(ts, steps_per_interval)
     n_intervals = ts.shape[0] - 1
 
     def step_fn(z, t_h):
         t, h = t_h
-        z_next = rk_step(tab, f, t, z, h, args).z_next
+        z_next = rk_step(tab, f, t, z, h, args,
+                         use_pallas=use_pallas).z_next
         return z_next, None
 
     # scan per interval so we can emit outputs
@@ -257,6 +273,8 @@ def fixed_grid_solve(
     ys = jax.tree.map(
         lambda z0l, tail: jnp.concatenate([z0l[None], tail], axis=0),
         z0, ys_tail)
+    if unravel is not None:
+        ys = jax.vmap(unravel)(ys)
 
     n_steps = n_intervals * steps_per_interval
     stats = SolveStats(

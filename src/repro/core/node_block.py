@@ -42,6 +42,7 @@ class NodeConfig:
     steps_per_interval: int = 4     # fixed-grid regime
     regime: str = "adaptive"        # adaptive | fixed
     t1: float = 1.0
+    use_pallas: bool = False        # fused flat-state solver kernels
 
 
 def node_block_apply(
@@ -64,6 +65,7 @@ def node_block_apply(
             solver=_fixed_solver_for(cfg.solver),
             grad_method=cfg.grad_method,
             steps_per_interval=cfg.steps_per_interval,
+            use_pallas=cfg.use_pallas,
         )
     else:
         zT, _ = odeint_final(
@@ -72,6 +74,7 @@ def node_block_apply(
             grad_method=cfg.grad_method,
             rtol=cfg.rtol, atol=cfg.atol,
             max_steps=cfg.max_steps,
+            use_pallas=cfg.use_pallas,
         )
     return zT
 

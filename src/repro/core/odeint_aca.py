@@ -32,6 +32,7 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .controller import ControllerConfig
 from .integrate import (
@@ -40,7 +41,7 @@ from .integrate import (
     adaptive_while_solve,
     make_fixed_grid,
 )
-from .stepper import rk_step
+from .stepper import maybe_flatten, rk_step
 from .tableaus import Tableau
 
 PyTree = Any
@@ -53,17 +54,21 @@ def _aca_backward_sweep(
     args: PyTree,
     g_ys: PyTree,
     n_steps,
+    use_pallas: bool = False,
 ):
     """Reverse sweep over the trajectory checkpoints.
 
     Returns (dL/dz0, dL/dargs).  ``g_ys`` are the output cotangents, one
     slot per eval time (g_ys[k] injected into λ when the sweep crosses
-    eval time ts[k]).
+    eval time ts[k]).  ``use_pallas`` replays each local ψ through the
+    fused flat-state kernels (their custom_vjp makes them legal under
+    the jax.vjp below).
     """
 
     def local_step(t_i, h_i, z_i, a):
         # one ψ with the SAVED stepsize; k0 recomputed so its gradient flows
-        return rk_step(tab, f, t_i, z_i, h_i, _as_tuple(a)).z_next
+        return rk_step(tab, f, t_i, z_i, h_i, _as_tuple(a),
+                       use_pallas=use_pallas).z_next
 
     lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))
     gargs0 = jax.tree.map(jnp.zeros_like, args)
@@ -112,12 +117,18 @@ def odeint_aca(
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
     h0: Optional[jnp.ndarray] = None,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Solve dz/dt = f(t, z, *args) with ACA gradients.
 
     Returns (ys, stats) with ys stacked over ``ts`` (ys[0] = z0).
     Differentiable w.r.t. ``z0`` and ``args``; ``ts`` is treated as
     constant (the paper differentiates neither t nor the accepted h).
+
+    ``use_pallas`` ravels the state once per solve and runs the trial
+    loop, the checkpoint buffer and the backward replay on the fused
+    flat-state kernel path; the ravel/unravel sit *outside* the
+    custom_vjp so cotangents flow through them as plain jnp reshapes.
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -127,29 +138,36 @@ def odeint_aca(
             "odeint_aca requires an embedded adaptive tableau; use "
             "odeint_aca_fixed for fixed-grid solvers")
 
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
+
     # ``ts`` is threaded as an explicit custom_vjp argument (closures over
     # trace-time values are illegal inside scan/grad — e.g. NODE blocks
     # inside a scanned layer stack).
     @jax.custom_vjp
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
-            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
+            use_pallas=use_pallas)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = adaptive_while_solve(
-            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
+            use_pallas=use_pallas)
         return (ys, stats), (ckpts, args, ts)
 
     def solve_bwd(res, cot):
         ckpts, args, ts = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
         dz0, dargs = _aca_backward_sweep(
-            solver, f, ckpts, args, g_ys, ckpts.n)
+            solver, f, ckpts, args, g_ys, ckpts.n, use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)
-    return solve(z0, args, ts)
+    ys, stats = solve(z0, args, ts)
+    if unravel is not None:
+        ys = jax.vmap(unravel)(ys)
+    return ys, stats
 
 
 def odeint_aca_fixed(
@@ -160,6 +178,7 @@ def odeint_aca_fixed(
     *,
     solver: Tableau,
     steps_per_interval: int = 8,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Fixed-grid ACA: checkpoint every grid state during the forward scan,
     replay one step at a time in the backward sweep.
@@ -168,9 +187,9 @@ def odeint_aca_fixed(
     intermediates), trading one extra ψ per step — the classic
     checkpoint-recompute profile, with the same discretize-then-optimize
     gradient.  Used by NODE-mode model stacks where a static step count is
-    required for multi-pod lowering.
+    required for multi-pod lowering.  ``use_pallas`` as in ``odeint_aca``.
     """
-    import numpy as np
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
 
     n_intervals = ts.shape[0] - 1
     n_steps = n_intervals * steps_per_interval
@@ -193,7 +212,8 @@ def odeint_aca_fixed(
     def _fwd(z0, args, t_grid, h_grid):
         def step_fn(z, th):
             t, h = th
-            z_next = rk_step(solver, f, t, z, h, _as_tuple(args)).z_next
+            z_next = rk_step(solver, f, t, z, h, _as_tuple(args),
+                             use_pallas=use_pallas).z_next
             return z_next, z  # checkpoint the START state of each step
 
         z_end, z_ckpt = jax.lax.scan(step_fn, z0, (t_grid, h_grid))
@@ -225,12 +245,15 @@ def odeint_aca_fixed(
             t=t_grid, h=h_grid, z=z_ckpt, out_idx=jnp.asarray(out_idx),
             n=jnp.asarray(n_steps, jnp.int32))
         dz0, dargs = _aca_backward_sweep(
-            solver, f, ckpts, args, g_ys, n_steps)
+            solver, f, ckpts, args, g_ys, n_steps, use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(t_grid), jnp.zeros_like(h_grid)
 
     solve.defvjp(solve_fwd, solve_bwd)
     t_grid, h_grid = make_fixed_grid(ts, steps_per_interval)
-    return solve(z0, args, t_grid, h_grid), stats
+    ys = solve(z0, args, t_grid, h_grid)
+    if unravel is not None:
+        ys = jax.vmap(unravel)(ys)
+    return ys, stats
 
 
 def _as_tuple(args) -> Tuple:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from .controller import ControllerConfig
 from .integrate import SolveStats, adaptive_while_solve, fixed_grid_solve
+from .stepper import flatten_problem, maybe_flatten
 from .tableaus import Tableau
 
 PyTree = Any
@@ -31,6 +32,23 @@ PyTree = Any
 
 def _as_tuple(args) -> Tuple:
     return args if isinstance(args, tuple) else (args,)
+
+
+def _solve_segment_adaptive(solver, g, aug, s_seg, args, rtol, atol, cfg,
+                            use_pallas):
+    """One reverse-time segment of the augmented system; when
+    ``use_pallas`` the whole (z̄, λ, ḡ) pytree is raveled into a single
+    flat carry for the fused stepper (falls back when dtypes mix)."""
+    flat = flatten_problem(g, aug) if use_pallas else None
+    if flat is not None:
+        g_flat, aug_flat, unravel = flat
+        ys_seg, _, _ = adaptive_while_solve(
+            solver, g_flat, aug_flat, s_seg, (args,), rtol, atol, cfg,
+            use_pallas=True)
+        return unravel(jax.tree.map(lambda y: y[-1], ys_seg))
+    ys_seg, _, _ = adaptive_while_solve(
+        solver, g, aug, s_seg, (args,), rtol, atol, cfg)
+    return jax.tree.map(lambda y: y[-1], ys_seg)
 
 
 def _aug_dynamics(f: Callable):
@@ -62,14 +80,22 @@ def odeint_adjoint(
     rtol: float = 1e-6,
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
-    """Adjoint-method odeint: O(N_f) memory, reverse-time numerical error."""
+    """Adjoint-method odeint: O(N_f) memory, reverse-time numerical error.
+
+    ``use_pallas`` runs the forward solve on the raveled state and each
+    backward segment on the raveled augmented (z̄, λ, ḡ) state, both
+    through the fused flat-state kernels.
+    """
     if cfg is None:
         cfg = ControllerConfig()
     if not solver.adaptive:
         raise ValueError("adjoint baseline expects an adaptive tableau; "
                          "fixed-grid adjoint == ANODE-style, see "
                          "odeint_adjoint_fixed")
+
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
 
     # forward buffers are not kept: capacity-1 checkpoint buffer (writes
     # beyond slot 0 are dropped by XLA OOB-scatter semantics)
@@ -82,12 +108,14 @@ def odeint_adjoint(
     @jax.custom_vjp
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
-            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg)
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
+            use_pallas=use_pallas)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
-            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg)
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
+            use_pallas=use_pallas)
         # residuals: ONLY the eval-time states (z(T) et al.) — O(N_f) memory
         return (ys, stats), (ys, args, ts)
 
@@ -106,11 +134,9 @@ def odeint_adjoint(
         # cotangents at each eval time (static python loop: n_eval is static)
         for k in range(n_eval - 2, -1, -1):
             s_seg = jnp.stack([-ts[k + 1], -ts[k]])
-            ys_seg, _, _ = adaptive_while_solve(
-                solver,
-                lambda s, a, ar: g_aug(s, a, ar),
-                aug, s_seg, (args,), rtol, atol, cfg)
-            aug = jax.tree.map(lambda y: y[-1], ys_seg)
+            aug = _solve_segment_adaptive(
+                solver, lambda s, a, ar: g_aug(s, a, ar), aug, s_seg,
+                args, rtol, atol, cfg, use_pallas)
             zk, lam, gargs = aug
             lam = jax.tree.map(lambda l, g: l + g[k], lam, g_ys)
             aug = (zk, lam, gargs)
@@ -119,7 +145,10 @@ def odeint_adjoint(
         return lam, gargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)
-    return solve(z0, args, ts)
+    ys, stats = solve(z0, args, ts)
+    if unravel is not None:
+        ys = jax.vmap(unravel)(ys)
+    return ys, stats
 
 
 def odeint_adjoint_fixed(
@@ -130,19 +159,22 @@ def odeint_adjoint_fixed(
     *,
     solver: Tableau,
     steps_per_interval: int = 8,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Fixed-grid adjoint (ANODE-family baseline): reverse-integrate the
     augmented system on the same uniform grid, O(N_f) memory, but the
-    reverse z̄ trajectory still drifts from the forward one."""
+    reverse z̄ trajectory still drifts from the forward one.
+    ``fixed_grid_solve`` ravels/unravels internally under ``use_pallas``,
+    both for the forward state and the backward augmented state."""
 
     @jax.custom_vjp
     def solve(z0, args, ts):
         return fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
-                                steps_per_interval)
+                                steps_per_interval, use_pallas=use_pallas)
 
     def solve_fwd(z0, args, ts):
         out = fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
-                               steps_per_interval)
+                               steps_per_interval, use_pallas=use_pallas)
         ys, stats = out
         return out, (ys, args, ts)
 
@@ -161,7 +193,8 @@ def odeint_adjoint_fixed(
             s_seg = jnp.stack([-ts[k + 1], -ts[k]])
             ys_seg, _ = fixed_grid_solve(
                 solver, lambda s, a, ar: g_aug(s, a, ar),
-                aug, s_seg, (args,), steps_per_interval)
+                aug, s_seg, (args,), steps_per_interval,
+                use_pallas=use_pallas)
             aug = jax.tree.map(lambda y: y[-1], ys_seg)
             zk, lam, gargs = aug
             lam = jax.tree.map(lambda l, g: l + g[k], lam, g_ys)

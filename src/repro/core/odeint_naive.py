@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
 from .integrate import SolveStats, fixed_grid_solve
-from .stepper import error_ratio, rk_step
+from .stepper import error_ratio, maybe_flatten, rk_step
 from .tableaus import Tableau
 
 PyTree = Any
@@ -44,17 +44,26 @@ def odeint_naive(
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
     trial_budget: Optional[int] = None,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Differentiable adaptive solve (naive method).
 
     ``trial_budget`` bounds the total number of ψ trials (accepted or
     rejected); defaults to cfg.max_steps * cfg.max_trials.
+
+    ``use_pallas`` runs every recorded trial (step + error norm) through
+    the fused flat-state kernels over the raveled state; reverse-mode AD
+    goes through their custom_vjp, including the stepsize chain via the
+    fused ``ratio``.
     """
     if cfg is None:
         cfg = ControllerConfig()
     if not solver.adaptive:
         return fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
-                                steps_per_interval=cfg.max_steps)
+                                steps_per_interval=cfg.max_steps,
+                                use_pallas=use_pallas)
+
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
 
     n_eval = ts.shape[0]
     tdt = ts.dtype
@@ -86,8 +95,10 @@ def odeint_naive(
 
         # NOTE: no k0 caching here — the naive method re-records the whole
         # trial in the graph, including the first stage.
-        res = rk_step(solver, f, t, z, h_use, targs)
-        ratio = error_ratio(res.err, z, res.z_next, rtol, atol)
+        res = rk_step(solver, f, t, z, h_use, targs,
+                      use_pallas=use_pallas, err_scale=(rtol, atol))
+        ratio = res.err_ratio if res.err_ratio is not None else \
+            error_ratio(res.err, z, res.z_next, rtol, atol)
         accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
 
         t_new = t + h_use
@@ -119,6 +130,7 @@ def odeint_naive(
         return c_new, None
 
     c, _ = jax.lax.scan(body, carry0, None, length=budget)
+    ys_out = c["ys"] if unravel is None else jax.vmap(unravel)(c["ys"])
 
     stats = SolveStats(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
@@ -126,7 +138,7 @@ def odeint_naive(
         nfe=jnp.asarray(budget * solver.stages, jnp.int32),
         overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
     )
-    return c["ys"], stats
+    return ys_out, stats
 
 
 def odeint_naive_fixed(
@@ -137,8 +149,9 @@ def odeint_naive_fixed(
     *,
     solver: Tableau,
     steps_per_interval: int = 8,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Naive fixed-grid: plain reverse-mode AD through the scan (stores all
     stage intermediates — O(N_f · N_t) memory, no recompute)."""
     return fixed_grid_solve(solver, f, z0, ts, _as_tuple(args),
-                            steps_per_interval)
+                            steps_per_interval, use_pallas=use_pallas)

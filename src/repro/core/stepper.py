@@ -5,9 +5,29 @@ state plus (for embedded pairs) the local error estimate.  This is the ψ of
 the paper's Algorithm 1; every gradient method (naive / adjoint / ACA) calls
 the same stepper so forward trajectories are bit-identical across methods.
 
-The stage accumulation  z + h·Σ a_ij k_j  is the memory-bound hot loop on
-TPU; ``repro.kernels.rk_stage`` provides a fused Pallas kernel for the flat
-(array) fast path, which this module dispatches to when enabled.
+Two execution paths, selected per call:
+
+* **Flat-array fast path** (``use_pallas=True`` *and* the state is a
+  single 1-D inexact array): the stage accumulations  z + h·Σ a_ij k_j,
+  the solution/error combine and — when ``err_scale=(rtol, atol)`` is
+  given — the scaled error norm of ``error_ratio`` are each one fused
+  Pallas kernel (``repro.kernels.rk_stage``), cutting the memory-bound
+  traffic of the trial loop roughly in half.  The fused norm is returned
+  as ``StepResult.err_ratio`` so the accept/reject loop skips its extra
+  full-array pass.  The kernels are wrapped in custom_vjp (backward =
+  the bit-matching jnp twin), so this path is differentiable and legal
+  inside the ACA backward replay and the naive method's scan.
+* **Pytree fallback** (default): pure ``jax.tree`` arithmetic over any
+  state structure/dtype mix; ``err_ratio`` is None and callers compute
+  ``error_ratio`` themselves.
+
+``flatten_problem`` is the per-solve adapter: it ravels a pytree state
+once (one ``ravel_pytree`` per solve, not per step), wraps the vector
+field to operate on the flat vector, and hands back the unravel for the
+outputs — solver loops then carry a single (N,) array, which also
+shrinks the while_loop carry the checkpoint writer updates every trial.
+States with mixed or non-inexact dtypes return None and stay on the
+pytree path.
 """
 
 from __future__ import annotations
@@ -17,6 +37,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 from .tableaus import Tableau
 
@@ -48,6 +69,97 @@ class StepResult(NamedTuple):
     z_next: PyTree
     err: Optional[PyTree]  # local error estimate (None for fixed-step)
     k_last: PyTree         # last stage derivative (FSAL reuse)
+    # scaled error norm from the fused kernel (flat fast path with
+    # err_scale only); None -> caller computes error_ratio itself
+    err_ratio: Optional[jnp.ndarray] = None
+
+
+def _is_flat_array(z: PyTree) -> bool:
+    return (isinstance(z, jax.Array) and z.ndim == 1
+            and jnp.issubdtype(z.dtype, jnp.inexact))
+
+
+def flatten_problem(f: VecField, z0: PyTree):
+    """Per-solve flat-state adapter for the fused kernel path.
+
+    Returns ``(f_flat, z0_flat, unravel)`` — the vector field over the
+    raveled (N,) state, the raveled initial state, and the inverse map
+    for outputs/checkpoints — or None when the state cannot be raveled
+    losslessly (mixed dtypes would be promoted, non-inexact leaves have
+    no kernel path); callers then fall back to the pytree path.
+    """
+    leaves = jax.tree.leaves(z0)
+    if not leaves:
+        return None
+    try:
+        dtypes = {jnp.result_type(leaf) for leaf in leaves}
+    except TypeError:
+        return None
+    if len(dtypes) != 1 or not jnp.issubdtype(dtypes.pop(), jnp.inexact):
+        return None
+    z0_flat, unravel = ravel_pytree(z0)
+
+    def f_flat(t, zf, *args):
+        return ravel_pytree(f(t, unravel(zf), *args))[0]
+
+    return f_flat, z0_flat, unravel
+
+
+def maybe_flatten(f: VecField, z0: PyTree, use_pallas: bool):
+    """Flag-gated ``flatten_problem``: the one fallback rule shared by
+    every solver entry point.
+
+    Returns ``(f, z0, unravel, use_pallas)`` — the flat problem with
+    ``use_pallas=True`` when raveling is possible and requested, else
+    the inputs unchanged with ``unravel=None`` and ``use_pallas=False``
+    (pytree path).
+    """
+    flat = flatten_problem(f, z0) if use_pallas else None
+    if flat is None:
+        return f, z0, None, False
+    f_flat, z0_flat, unravel = flat
+    return f_flat, z0_flat, unravel, True
+
+
+def _rk_step_flat(
+    tab: Tableau,
+    f: VecField,
+    t,
+    z: jnp.ndarray,
+    h,
+    args: Tuple,
+    k0: Optional[jnp.ndarray],
+    err_scale: Optional[Tuple[float, float]],
+) -> StepResult:
+    """Fused-kernel ψ over a flat (N,) state (see module docstring)."""
+    # deferred: importing repro.kernels at module scope would cycle
+    # through kernels.ref -> repro.models -> repro.core
+    from repro.kernels import ops
+
+    k0v = k0 if k0 is not None else f(t, z, *args)
+    ks = jnp.zeros((tab.stages,) + z.shape, k0v.dtype).at[0].set(k0v)
+    for i in range(1, tab.stages):
+        zi = ops.rk_stage_increment(z, ks[:i], h, tab.a[i])
+        ks = ks.at[i].set(f(t + tab.c[i] * h, zi, *args))
+
+    ratio = None
+    if tab.b_err is not None and err_scale is not None:
+        rtol, atol = err_scale
+        # with_err=False: the accept/reject loop reads only z_next and
+        # the fused norm — the (N,) err buffer is never materialized
+        z_next, err, sq_sum = ops.rk_stage_combine_err(
+            z, ks, h, tab.b, tab.b_err, rtol, atol, with_err=False)
+        ratio = jnp.sqrt(sq_sum / z.size)
+    else:
+        # no consumer for err here (fixed tableaus have none; the ACA
+        # backward replay reads only z_next): the solution combine is
+        # the increment kernel with the b row — skips the N-sized err
+        # store on this memory-bound loop
+        z_next = ops.rk_stage_increment(z, ks, h, tab.b)
+        err = None
+    k_last = ks[-1] if tab.fsal else ks[0]
+    return StepResult(z_next=z_next, err=err, k_last=k_last,
+                      err_ratio=ratio)
 
 
 def rk_step(
@@ -58,13 +170,26 @@ def rk_step(
     h,
     args: Tuple = (),
     k0: Optional[PyTree] = None,
+    *,
+    use_pallas: bool = False,
+    err_scale: Optional[Tuple[float, float]] = None,
 ) -> StepResult:
     """One explicit RK step of ``tab`` from (t, z) with stepsize h.
 
     ``k0`` optionally supplies the first stage derivative (FSAL).
     Returns z_{n+1}, the embedded error estimate (h·Σ b_err_i k_i) and the
     final stage derivative for FSAL chaining.
+
+    ``use_pallas=True`` dispatches to the fused Pallas kernels when the
+    state is a single flat inexact array (see ``flatten_problem``);
+    other states silently take the pytree path.  With ``err_scale=(rtol,
+    atol)`` the fused path additionally returns the scaled error norm in
+    ``StepResult.err_ratio``; *without* err_scale the fused path returns
+    ``err=None`` even for embedded tableaus (the err buffer is not
+    materialized — adaptive callers always pass err_scale).
     """
+    if use_pallas and _is_flat_array(z):
+        return _rk_step_flat(tab, f, t, z, h, args, k0, err_scale)
     ks = []
     for i in range(tab.stages):
         if i == 0:

@@ -18,11 +18,21 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention_pallas
 from .rg_lru import rg_lru_pallas
-from .rk_stage import rk_stage_combine_pallas
+from .rk_stage import (
+    _BLOCK,
+    combine_err_jnp,
+    combine_jnp,
+    increment_jnp,
+    rk_stage_combine_err_pallas,
+    rk_stage_combine_pallas,
+    rk_stage_increment_pallas,
+)
 from .rmsnorm import rmsnorm_pallas
 from .ssd_scan import ssd_scan_pallas
 
 _FORCE_INTERPRET: Optional[bool] = None
+
+_FALSY = ("0", "false", "no", "off", "")
 
 
 def set_interpret(value: Optional[bool]) -> None:
@@ -33,14 +43,119 @@ def set_interpret(value: Optional[bool]) -> None:
 def _interpret() -> bool:
     if _FORCE_INTERPRET is not None:
         return _FORCE_INTERPRET
-    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env.strip().lower() not in _FALSY:
         return True
     return jax.default_backend() != "tpu"
 
 
-def rk_stage_combine(z, k, h, b, e=None, **kw):
-    return rk_stage_combine_pallas(z, k, h, b, e,
-                                   interpret=_interpret(), **kw)
+# --------------------------------------------------------------- rk kernels
+# The RK kernels sit on every gradient method's differentiation path (the
+# naive method differentiates straight through the solver; ACA replays
+# local steps under jax.vjp), and pallas_call has no transpose rule —
+# each op is therefore a custom_vjp whose forward runs the kernel and
+# whose backward is jax.vjp of the bit-matching pure-jnp twin from
+# ``rk_stage.py``.  Weights/tolerances are static (baked into the kernel).
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _rk_combine(z, k, h, b, e, block, interpret):
+    return rk_stage_combine_pallas(z, k, h, b, e, block=block,
+                                   interpret=interpret)
+
+
+def _rk_combine_fwd(z, k, h, b, e, block, interpret):
+    return _rk_combine(z, k, h, b, e, block, interpret), (z, k, h)
+
+
+def _rk_combine_bwd(b, e, block, interpret, res, g):
+    z, k, h = res
+    _, vjp = jax.vjp(lambda z_, k_, h_: combine_jnp(z_, k_, h_, b, e),
+                     z, k, h)
+    return vjp(g)
+
+
+_rk_combine.defvjp(_rk_combine_fwd, _rk_combine_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _rk_increment(z, k, h, a, block, interpret):
+    return rk_stage_increment_pallas(z, k, h, a, block=block,
+                                     interpret=interpret)
+
+
+def _rk_increment_fwd(z, k, h, a, block, interpret):
+    return _rk_increment(z, k, h, a, block, interpret), (z, k, h)
+
+
+def _rk_increment_bwd(a, block, interpret, res, g):
+    z, k, h = res
+    _, vjp = jax.vjp(lambda z_, k_, h_: increment_jnp(z_, k_, h_, a),
+                     z, k, h)
+    return vjp(g)
+
+
+_rk_increment.defvjp(_rk_increment_fwd, _rk_increment_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _rk_combine_err(z, k, h, b, e, rtol, atol, with_err, block, interpret):
+    zn, err, partials = rk_stage_combine_err_pallas(
+        z, k, h, b, e, rtol, atol, with_err=with_err, block=block,
+        interpret=interpret)
+    sq = partials.sum()
+    return (zn, err, sq) if with_err else (zn, sq)
+
+
+def _rk_combine_err_fwd(z, k, h, b, e, rtol, atol, with_err, block,
+                        interpret):
+    return (_rk_combine_err(z, k, h, b, e, rtol, atol, with_err, block,
+                            interpret), (z, k, h))
+
+
+def _rk_combine_err_bwd(b, e, rtol, atol, with_err, block, interpret,
+                        res, g):
+    z, k, h = res
+    _, vjp = jax.vjp(
+        lambda z_, k_, h_: combine_err_jnp(z_, k_, h_, b, e, rtol, atol,
+                                           with_err), z, k, h)
+    return vjp(g)
+
+
+_rk_combine_err.defvjp(_rk_combine_err_fwd, _rk_combine_err_bwd)
+
+
+def rk_stage_combine(z, k, h, b, e=None, *, block=None):
+    """Fused (z + h·Σ b_i k_i, h·Σ e_i k_i); differentiable."""
+    e_t = tuple(float(x) for x in e) if e is not None else None
+    return _rk_combine(z, k, h, tuple(float(x) for x in b), e_t,
+                       _BLOCK if block is None else int(block),
+                       _interpret())
+
+
+def rk_stage_increment(z, k, h, a, *, block=None):
+    """Fused stage argument z + h·Σ_j a_j k_j; differentiable."""
+    return _rk_increment(z, k, h, tuple(float(x) for x in a),
+                         _BLOCK if block is None else int(block),
+                         _interpret())
+
+
+def rk_stage_combine_err(z, k, h, b, e, rtol, atol, *, with_err=True,
+                         block=None):
+    """Fused combine + scalar Σ (err/(atol+rtol·max|z|))²; differentiable.
+
+    Returns (z_next, err, sq_sum); sqrt(sq_sum / N) is ``error_ratio``.
+    ``with_err=False`` skips the (N,) err store — the solver loop needs
+    only z_next and the norm — and returns None in the err slot.
+    """
+    out = _rk_combine_err(z, k, h, tuple(float(x) for x in b),
+                          tuple(float(x) for x in e), float(rtol),
+                          float(atol), bool(with_err),
+                          _BLOCK if block is None else int(block),
+                          _interpret())
+    if with_err:
+        return out
+    zn, sq = out
+    return zn, None, sq
 
 
 def rmsnorm(x, w, eps: float = 1e-6, **kw):

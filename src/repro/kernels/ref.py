@@ -13,22 +13,38 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.rk_stage import combine_err_jnp, combine_jnp, \
+    increment_jnp
 from repro.models.attention import full_attention
 from repro.models.common import rmsnorm as _rmsnorm_model
 from repro.models.mamba2 import ssd_chunked as _ssd_chunked_model
 
 
 def rk_stage_combine_ref(z, k, h, b, e) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """z (N,), k (s, N), h scalar -> (z + h Σ b_i k_i,  h Σ e_i k_i)."""
-    bw = jnp.asarray(b, jnp.float32)[:, None]
-    kf = k.astype(jnp.float32)
-    zn = z.astype(jnp.float32) + h * (bw * kf).sum(0)
-    if e is None:
-        err = jnp.zeros_like(zn)
-    else:
-        ew = jnp.asarray(e, jnp.float32)[:, None]
-        err = h * (ew * kf).sum(0)
-    return zn.astype(z.dtype), err
+    """z (N,), k (s, N), h scalar -> (z + h Σ b_i k_i,  h Σ e_i k_i).
+
+    Shares the pure-jnp twin that the kernels' custom_vjp backward
+    differentiates (same pattern as the model-code reuse below): the
+    kernel, the backward pass and the oracle cannot drift apart.
+    """
+    return combine_jnp(z, k, h, tuple(b),
+                       tuple(e) if e is not None else None)
+
+
+def rk_stage_increment_ref(z, k, h, a) -> jnp.ndarray:
+    """z (N,), k (j, N), h scalar -> z + h Σ_j a_j k_j (in z.dtype)."""
+    return increment_jnp(z, k, h, tuple(a))
+
+
+def rk_stage_combine_err_ref(
+    z, k, h, b, e, rtol: float, atol: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Combine + scalar Σ (err/(atol+rtol·max(|z|,|z_next|)))².
+
+    The kernel emits per-tile partials of the same sum; the oracle
+    returns the total (what ``error_ratio`` squares to, times N).
+    """
+    return combine_err_jnp(z, k, h, tuple(b), tuple(e), rtol, atol)
 
 
 def rmsnorm_ref(x, w, eps: float = 1e-6) -> jnp.ndarray:

@@ -1,19 +1,26 @@
-"""Fused Runge-Kutta stage combine — the ACA inner-loop hot spot.
+"""Fused Runge-Kutta kernels — the ACA inner-loop hot spot.
 
-Every accepted ODE step evaluates
+The per-trial cost of ψ over a flat (N,) state is three memory-bound
+passes, each fused into one Pallas kernel here:
 
-    z_next = z + h · Σ_i b_i k_i          (solution combine)
-    err    =     h · Σ_i e_i k_i          (embedded error estimate)
+  * ``rk_stage_increment_pallas`` — per-stage state  z + h · Σ_j a_ij k_j
+    (the argument of the i-th f evaluation); weights baked per tableau
+    row, zero weights skipped at compile time.
+  * ``rk_stage_combine_pallas`` — the accepted-solution combine
+    z_next = z + h·Σ b_i k_i  and embedded error  err = h·Σ e_i k_i in a
+    single pass.  Unfused, XLA materializes s intermediate AXPY results
+    in HBM (s = #stages, up to 7 for Dopri5): ~(2s+2)·N bytes moved; the
+    fused pass moves (s+3)·N — a ~2× cut of the memory-bound term.
+  * ``rk_stage_combine_err_pallas`` — the combine *plus* per-tile
+    partial sums of the scaled error norm
+    Σ (err / (atol + rtol·max(|z|, |z_next|)))², so the accept/reject
+    loop's ``error_ratio`` costs no extra full-array pass at all.
 
-over the flattened state.  Unfused, XLA materializes s intermediate
-AXPY results in HBM (s = #stages, up to 7 for Dopri5): ~(2s+2)·N bytes
-moved.  The kernel streams one VMEM tile of every stage derivative and
-the state, producing both outputs in a single pass: (s+3)·N bytes —
-a ~2× cut of the memory-bound term of the solver loop.
-
-Layout: k is stacked (s, N); the grid tiles N.  b/e weights are baked
-into the kernel as compile-time constants (they come from the tableau),
-h arrives as a (1, 1) SMEM scalar.
+Layout: k is stacked (s, N); the grid tiles N.  Weights/tolerances are
+baked into the kernel as compile-time constants (they come from the
+tableau), h arrives as a (1, 1) SMEM scalar.  ``*_ref`` companions in
+``ref.py`` are the oracles; the differentiable dispatch wrappers live in
+``ops.py``.
 """
 
 from __future__ import annotations
@@ -33,6 +40,46 @@ except Exception:  # pragma: no cover
     _SMEM = None
 
 _BLOCK = 2048  # lanes per tile: multiple of 128 (VPU lane width)
+
+
+# --- pure-jnp twins -------------------------------------------------------
+# Pallas calls have no transpose rule, so ``ops.py`` wraps each kernel in a
+# custom_vjp whose backward is jax.vjp of these functions.  They must
+# compute exactly what the kernel computes (same dtypes, same weight
+# handling); the independent oracles used by the tests live in ``ref.py``.
+
+def combine_jnp(z, k, h, b, e):
+    kf = k.astype(jnp.float32)
+    bw = jnp.asarray(b, jnp.float32)[:, None]
+    zn = (z.astype(jnp.float32) + h * (bw * kf).sum(0)).astype(z.dtype)
+    if e is None:
+        err = jnp.zeros(z.shape, jnp.float32)
+    else:
+        ew = jnp.asarray(e, jnp.float32)[:, None]
+        err = (h * (ew * kf).sum(0)).astype(jnp.float32)
+    return zn, err
+
+
+def increment_jnp(z, k, h, a):
+    aw = jnp.asarray(tuple(a)[: k.shape[0]], jnp.float32)[:, None]
+    incr = (aw * k.astype(jnp.float32)).sum(0)
+    return (z.astype(jnp.float32) + h * incr).astype(z.dtype)
+
+
+def combine_err_jnp(z, k, h, b, e, rtol, atol, with_err=True):
+    zn, err = combine_jnp(z, k, h, b, e)
+    scale = atol + rtol * jnp.maximum(
+        jnp.abs(z.astype(jnp.float32)), jnp.abs(zn.astype(jnp.float32)))
+    r = err / scale
+    sq = jnp.sum(r * r)
+    return (zn, err, sq) if with_err else (zn, sq)
+
+
+def _h_spec(interpret: bool):
+    smem = _SMEM if (_SMEM is not None and not interpret) else None
+    if smem is not None:
+        return pl.BlockSpec(memory_space=smem)
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
 
 
 def _kernel(h_ref, z_ref, k_ref, out_ref, err_ref, *, b, e):
@@ -74,15 +121,12 @@ def rk_stage_combine_pallas(
     grid = (npad // block,)
 
     h2d = jnp.asarray(h, jnp.float32).reshape(1, 1)
-    smem = _SMEM if (_SMEM is not None and not interpret) else None
-    h_spec = pl.BlockSpec(memory_space=smem) if smem is not None else \
-        pl.BlockSpec((1, 1), lambda i: (0, 0))
 
     out, err = pl.pallas_call(
         functools.partial(_kernel, b=b, e=e),
         grid=grid,
         in_specs=[
-            h_spec,
+            _h_spec(interpret),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((s, block), lambda i: (0, i)),
         ],
@@ -99,3 +143,145 @@ def rk_stage_combine_pallas(
     if pad:
         out, err = out[:n], err[:n]
     return out, err
+
+
+def _incr_kernel(h_ref, z_ref, k_ref, out_ref, *, a):
+    h = h_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(z)
+    for j, aj in enumerate(a):
+        if aj != 0.0:
+            acc = acc + aj * k_ref[j, :].astype(jnp.float32)
+    out_ref[...] = (z + h * acc).astype(out_ref.dtype)
+
+
+def rk_stage_increment_pallas(
+    z: jnp.ndarray,          # (N,) flattened state
+    k: jnp.ndarray,          # (j, N) stage derivatives computed so far
+    h: jnp.ndarray,          # scalar stepsize
+    a: Sequence[float],      # tableau row a[i][:j]
+    *,
+    block: int = _BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns z + h · Σ_j a_j k_j  (the i-th stage argument), shape (N,)."""
+    s, n = k.shape
+    assert z.shape == (n,)
+    a = tuple(a)[:s]
+
+    pad = (-n) % block
+    if pad:
+        z = jnp.pad(z, (0, pad))
+        k = jnp.pad(k, ((0, 0), (0, pad)))
+    npad = n + pad
+    grid = (npad // block,)
+    h2d = jnp.asarray(h, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_incr_kernel, a=a),
+        grid=grid,
+        in_specs=[
+            _h_spec(interpret),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((s, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), z.dtype),
+        interpret=interpret,
+    )(h2d, z, k)
+    return out[:n] if pad else out
+
+
+def _combine_err_kernel(h_ref, z_ref, k_ref, out_ref, *out_rest,
+                        b, e, rtol, atol, with_err):
+    err_ref, nrm_ref = out_rest if with_err else (None, out_rest[0])
+    h = h_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(z)
+    err = jnp.zeros_like(z)
+    for i, (bi, ei) in enumerate(zip(b, e)):
+        ki = k_ref[i, :].astype(jnp.float32)
+        if bi != 0.0:
+            acc = acc + bi * ki
+        if ei != 0.0:
+            err = err + ei * ki
+    zn = z + h * acc
+    err = h * err
+    out_ref[...] = zn.astype(out_ref.dtype)
+    if with_err:
+        err_ref[...] = err
+    scale = atol + rtol * jnp.maximum(jnp.abs(z), jnp.abs(zn))
+    r = err / scale
+    nrm_ref[0] = jnp.sum(r * r)
+
+
+def rk_stage_combine_err_pallas(
+    z: jnp.ndarray,          # (N,) flattened state
+    k: jnp.ndarray,          # (s, N) stacked stage derivatives
+    h: jnp.ndarray,          # scalar stepsize
+    b: Sequence[float],      # solution weights
+    e: Sequence[float],      # embedded-error weights
+    rtol: float,
+    atol: float,
+    *,
+    with_err: bool = True,
+    block: int = _BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray]:
+    """Returns (z_next (N,), err (N,) | None, norm_partials (n_tiles,)).
+
+    ``norm_partials[t]`` is the tile-t partial sum of
+    (err / (atol + rtol·max(|z|, |z_next|)))² — summing it and dividing
+    by N gives ``error_ratio``² without a second full-array pass.
+    Padded lanes are filled with z=1, k=0 so err=0 there and the scale
+    stays positive: they contribute exactly 0 to the norm.
+
+    ``with_err=False`` skips the (N,) err store entirely (the adaptive
+    solver loop consumes only z_next and the norm) and returns None in
+    its slot.
+    """
+    s, n = k.shape
+    assert z.shape == (n,)
+    b = tuple(b)
+    e = tuple(e)
+
+    pad = (-n) % block
+    if pad:
+        z = jnp.pad(z, (0, pad), constant_values=1)
+        k = jnp.pad(k, ((0, 0), (0, pad)))
+    npad = n + pad
+    grid = (npad // block,)
+    h2d = jnp.asarray(h, jnp.float32).reshape(1, 1)
+
+    err_specs = [pl.BlockSpec((block,), lambda i: (i,))] if with_err \
+        else []
+    err_shapes = [jax.ShapeDtypeStruct((npad,), jnp.float32)] \
+        if with_err else []
+    outs = pl.pallas_call(
+        functools.partial(_combine_err_kernel, b=b, e=e,
+                          rtol=float(rtol), atol=float(atol),
+                          with_err=with_err),
+        grid=grid,
+        in_specs=[
+            _h_spec(interpret),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((s, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            *err_specs,
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), z.dtype),
+            *err_shapes,
+            jax.ShapeDtypeStruct((npad // block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h2d, z, k)
+    out = outs[0][:n] if pad else outs[0]
+    nrm = outs[-1]
+    if not with_err:
+        return out, None, nrm
+    err = outs[1][:n] if pad else outs[1]
+    return out, err, nrm

@@ -91,7 +91,9 @@ class RunConfig:
     remat: str = "none"                   # none | block  (activation ckpt)
     node: NodeConfig = NodeConfig()       # continuous-depth (the paper)
     scan_layers: bool = True              # scan-over-layers (O(1) HLO size)
-    use_pallas: bool = False              # TPU kernels (interpret in tests)
+    # TPU kernels (interpret mode in tests) — also switches every NODE
+    # block's ODE solve onto the fused flat-state stepper path
+    use_pallas: bool = False
     decode_seq_shard: bool = True         # flash-decode KV-seq sharding
     max_seq: int = 0                      # KV-cache capacity (serving)
     zero1: bool = True                    # optimizer states sharded like params

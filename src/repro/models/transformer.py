@@ -20,6 +20,7 @@ multi-pod lowering; ``adaptive`` matches the paper's training setup.
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -197,10 +198,15 @@ def stack_cache_defs(cfg: ModelConfig, batch: int, max_seq: int,
 
 def _apply_one(p, x, cfg, rcfg, kind, mode, positions, cache):
     if rcfg.node.enabled and mode == "train":
-        # the paper: residual block -> ODE block, ACA gradients
+        # the paper: residual block -> ODE block, ACA gradients.
+        # RunConfig.use_pallas turns on the fused flat-state solver path
+        # for every NODE block, matching the kernels used elsewhere.
+        ncfg = rcfg.node
+        if rcfg.use_pallas and not ncfg.use_pallas:
+            ncfg = dataclasses.replace(ncfg, use_pallas=True)
         zT = node_block_apply(
             lambda pp, z, t: _branch_fn(pp, z, cfg, rcfg, kind, positions),
-            p, x, rcfg.node)
+            p, x, ncfg)
         return zT, None, jnp.zeros((), jnp.float32)
     return block_apply(p, x, cfg, rcfg, kind, mode=mode,
                        positions=positions, cache=cache)

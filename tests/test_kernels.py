@@ -40,6 +40,81 @@ def test_rk_stage_combine(tab, n, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("tab", [BOGACKI_SHAMPINE, DOPRI5])
+@pytest.mark.parametrize("stage", [1, 2, 3])
+@pytest.mark.parametrize("n", [37, 1000])
+def test_rk_stage_increment(tab, stage, n):
+    key = jax.random.PRNGKey(n + stage)
+    z = jax.random.normal(key, (n,))
+    k = jax.random.normal(jax.random.PRNGKey(n), (stage, n))
+    h = jnp.float32(0.03)
+    o1 = ops.rk_stage_increment(z, k, h, tab.a[stage], block=512)
+    o2 = ref.rk_stage_increment_ref(z, k, h, tab.a[stage])
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("tab", [HEUN_EULER, BOGACKI_SHAMPINE, DOPRI5])
+@pytest.mark.parametrize("n", [37, 1000, 5000])
+def test_rk_stage_combine_err_partial_norm(tab, n):
+    """The extended combine kernel's per-tile partial sums must total the
+    oracle's full-array scaled error norm (and padding lanes must
+    contribute exactly zero)."""
+    rtol, atol = 1e-3, 1e-4
+    z = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    k = jax.random.normal(jax.random.PRNGKey(n + 1), (tab.stages, n))
+    h = jnp.float32(0.05)
+    o1, e1, sq1 = ops.rk_stage_combine_err(z, k, h, tab.b, tab.b_err,
+                                           rtol, atol, block=512)
+    o2, e2, sq2 = ref.rk_stage_combine_err_ref(z, k, h, tab.b, tab.b_err,
+                                               rtol, atol)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(sq1), float(sq2), rtol=1e-5)
+    # solver-loop variant: err store skipped, z_next/norm unchanged
+    o3, e3, sq3 = ops.rk_stage_combine_err(z, k, h, tab.b, tab.b_err,
+                                           rtol, atol, with_err=False,
+                                           block=512)
+    assert e3 is None
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o3))
+    np.testing.assert_array_equal(float(sq1), float(sq3))
+
+
+def test_rk_ops_differentiable():
+    """The kernel wrappers carry a custom_vjp (pallas_call itself has no
+    transpose rule) whose backward must match AD through the oracle."""
+    tab = DOPRI5
+    n = 300
+    z = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    k = jax.random.normal(jax.random.PRNGKey(1), (tab.stages, n))
+    h = jnp.float32(0.07)
+
+    def loss_op(z, k, h):
+        zn, err, sq = ops.rk_stage_combine_err(
+            z, k, h, tab.b, tab.b_err, 1e-3, 1e-4, block=128)
+        return jnp.sum(zn ** 2) + jnp.sum(err ** 2) + sq
+
+    def loss_ref(z, k, h):
+        zn, err, sq = ref.rk_stage_combine_err_ref(
+            z, k, h, tab.b, tab.b_err, 1e-3, 1e-4)
+        return jnp.sum(zn ** 2) + jnp.sum(err ** 2) + sq
+
+    g1 = jax.grad(loss_op, argnums=(0, 1, 2))(z, k, h)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(z, k, h)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+    gi1 = jax.grad(lambda z: jnp.sum(
+        ops.rk_stage_increment(z, k[:3], h, tab.a[3], block=128) ** 2))(z)
+    gi2 = jax.grad(lambda z: jnp.sum(
+        ref.rk_stage_increment_ref(z, k[:3], h, tab.a[3]) ** 2))(z)
+    np.testing.assert_allclose(np.asarray(gi1), np.asarray(gi2),
+                               rtol=1e-5, atol=1e-6)
+
+
 # ------------------------------------------------------------------ rmsnorm
 @pytest.mark.parametrize("shape", [(4, 64), (3, 17, 128), (2, 5, 7, 256)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -89,6 +89,35 @@ def test_node_mode_trains(regime, gm):
     assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
 
 
+def test_node_mode_run_config_use_pallas_reaches_solver():
+    """RunConfig.use_pallas must flow into every NODE block's odeint:
+    the fused flat-state path (interpret mode here) reproduces the
+    pytree path's loss exactly and its gradients to fp tolerance."""
+    from repro.kernels import ops
+
+    ops.set_interpret(True)
+    try:
+        cfg = CONFIGS["dense-gqa"]
+        node = NodeConfig(enabled=True, regime="adaptive",
+                          grad_method="aca", max_steps=16)
+        batch = tiny_batch(cfg)
+        out = {}
+        for up in (False, True):
+            m = build_model(cfg, RunConfig(compute_dtype=jnp.float32,
+                                           node=node, use_pallas=up))
+            params = m.init(jax.random.PRNGKey(1))
+            (loss, _), grads = jax.value_and_grad(
+                m.loss_fn, has_aux=True)(params, batch)
+            out[up] = (float(loss), grads)
+        assert out[False][0] == out[True][0]
+        for a, b in zip(jax.tree.leaves(out[False][1]),
+                        jax.tree.leaves(out[True][1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+    finally:
+        ops.set_interpret(None)
+
+
 def test_node_mode_param_count_unchanged():
     """Eq. 30→31: the NODE transform preserves the parameter count."""
     cfg = CONFIGS["dense-gqa"]

@@ -159,6 +159,106 @@ def test_grad_methods_inside_scan():
             assert jnp.isfinite(g).all(), (m, solver)
 
 
+# ------------------------------------------------- fused flat-state path
+
+@pytest.fixture
+def _interpret_kernels():
+    from repro.kernels import ops
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _parity_case(method, solver, use_pallas, **kw):
+    def f(t, z, w):
+        return jnp.tanh(w @ z)
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (8,))
+
+    def loss(w):
+        ys, _ = odeint(f, z0, jnp.array([0.0, 0.5, 1.0]), (w,),
+                       solver=solver, grad_method=method,
+                       use_pallas=use_pallas, **kw)
+        return jnp.sum(ys[-1] ** 2), ys
+
+    (_, ys), g = jax.value_and_grad(loss, has_aux=True)(w)
+    return np.asarray(ys), np.asarray(g)
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+@pytest.mark.parametrize("solver", ["heun_euler", "bosh3", "dopri5"])
+def test_pallas_parity_adaptive(method, solver, _interpret_kernels):
+    """The fused flat-state path (interpret mode) must reproduce the
+    pytree path bit-for-bit on the forward trajectory — same accepted
+    grid, same accept/reject decisions — and match its gradients."""
+    kw = dict(rtol=1e-5, atol=1e-5, max_steps=64)
+    ys0, g0 = _parity_case(method, solver, False, **kw)
+    ys1, g1 = _parity_case(method, solver, True, **kw)
+    np.testing.assert_array_equal(ys0, ys1)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+@pytest.mark.parametrize("solver", ["rk4", "rk2"])
+def test_pallas_parity_fixed_grid(method, solver, _interpret_kernels):
+    kw = dict(steps_per_interval=8)
+    ys0, g0 = _parity_case(method, solver, False, **kw)
+    ys1, g1 = _parity_case(method, solver, True, **kw)
+    np.testing.assert_array_equal(ys0, ys1)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+def test_pallas_parity_pytree_state(method, _interpret_kernels):
+    """Multi-leaf states go through the per-solve ravel adapter: one
+    ravel_pytree per solve, flat (N,) carry inside."""
+    def f(t, z, w):
+        return {"a": jnp.tanh(w @ z["b"]), "b": jnp.tanh(w @ z["a"])}
+
+    z0 = {"a": jnp.ones((4,)), "b": jnp.zeros((4,))}
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 4)) * 0.3
+
+    def loss(w, up):
+        ys, _ = odeint(f, z0, jnp.array([0.0, 1.0]), (w,),
+                       solver="dopri5", grad_method=method,
+                       rtol=1e-5, atol=1e-5, use_pallas=up)
+        return sum(jnp.sum(v[-1] ** 2) for v in ys.values()), ys
+
+    (_, ys0), g0 = jax.value_and_grad(lambda w: loss(w, False),
+                                      has_aux=True)(w)
+    (_, ys1), g1 = jax.value_and_grad(lambda w: loss(w, True),
+                                      has_aux=True)(w)
+    for k in ys0:
+        np.testing.assert_array_equal(np.asarray(ys0[k]),
+                                      np.asarray(ys1[k]))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_pallas_path_actually_dispatches(monkeypatch, _interpret_kernels):
+    """use_pallas=True must hit the fused kernels (not silently fall
+    back): count the dispatch-layer calls during an adaptive solve."""
+    from repro.kernels import ops
+
+    calls = {"combine_err": 0, "increment": 0}
+    orig_ce, orig_inc = ops.rk_stage_combine_err, ops.rk_stage_increment
+    monkeypatch.setattr(
+        ops, "rk_stage_combine_err",
+        lambda *a, **k: (calls.__setitem__(
+            "combine_err", calls["combine_err"] + 1) or orig_ce(*a, **k)))
+    monkeypatch.setattr(
+        ops, "rk_stage_increment",
+        lambda *a, **k: (calls.__setitem__(
+            "increment", calls["increment"] + 1) or orig_inc(*a, **k)))
+
+    ys, _ = odeint(lambda t, z: -z, jnp.ones((4,)), jnp.array([0.0, 1.0]),
+                   solver="dopri5", grad_method="aca", rtol=1e-6,
+                   atol=1e-6, use_pallas=True)
+    assert calls["combine_err"] > 0 and calls["increment"] > 0
+    assert jnp.isfinite(ys).all()
+
+
 def test_solver_stats():
     ys, stats = odeint(lambda t, z: -z, jnp.float32(1.0),
                        jnp.array([0.0, 1.0]), solver="dopri5",

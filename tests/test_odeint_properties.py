@@ -1,9 +1,16 @@
-"""Hypothesis property tests on the solver/gradient invariants."""
+"""Hypothesis property tests on the solver/gradient invariants.
+
+Skipped (not errored) when ``hypothesis`` is absent from the image —
+these are extra coverage on top of the deterministic suites.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import odeint
 from repro.core.controller import ControllerConfig, propose_stepsize
