@@ -1,9 +1,10 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV / JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Mapping
 
 import jax
 
@@ -14,6 +15,21 @@ def emit(name: str, value, derived: str = "") -> None:
     row = f"{name},{value},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def emit_json(bench: str, metrics: Mapping) -> None:
+    """Emit one headline JSON line in the shared schema:
+
+        {"bench": <name>, "metrics": {<metric>: <number|string>, ...}}
+
+    One line per benchmark, greppable as ``^{"bench"`` — the machine
+    counterpart of the ``emit`` CSV rows.  Values must be plain
+    JSON-serializable scalars (floats/ints/strings).
+    """
+    line = json.dumps({"bench": bench, "metrics": dict(metrics)},
+                      sort_keys=True)
+    ROWS.append(line)
+    print(line, flush=True)
 
 
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:

@@ -12,10 +12,10 @@ import argparse
 import time
 import traceback
 
-from . import (bench_classification, bench_method_costs,
-               bench_node_lm, bench_reliability, bench_reverse_error,
-               bench_solver_robustness, bench_threebody,
-               bench_timeseries, bench_toy_gradient)
+from . import (bench_batched_solve, bench_classification,
+               bench_method_costs, bench_node_lm, bench_reliability,
+               bench_reverse_error, bench_solver_robustness,
+               bench_threebody, bench_timeseries, bench_toy_gradient)
 from .common import emit
 
 BENCHES = [
@@ -28,6 +28,7 @@ BENCHES = [
     ("timeseries (Table 4)", bench_timeseries.run),
     ("threebody (Table 5/Fig.8)", bench_threebody.run),
     ("node_lm (beyond-paper: LM ablation)", bench_node_lm.run),
+    ("batched_solve (beyond-paper: batch_axis)", bench_batched_solve.run),
 ]
 
 

@@ -9,12 +9,26 @@ Public API:
 
 from .api import GRAD_METHODS, odeint, odeint_final
 from .controller import ControllerConfig
-from .integrate import Checkpoints, SolveStats, adaptive_while_solve, fixed_grid_solve
+from .integrate import (
+    Checkpoints,
+    SolveStats,
+    adaptive_while_solve,
+    batched_adaptive_while_solve,
+    fixed_grid_solve,
+)
 from .node_block import NodeConfig, node_block_apply
-from .odeint_aca import odeint_aca, odeint_aca_fixed
-from .odeint_adjoint import odeint_adjoint, odeint_adjoint_fixed
-from .odeint_naive import odeint_naive, odeint_naive_fixed
-from .stepper import rk_step
+from .odeint_aca import odeint_aca, odeint_aca_batched, odeint_aca_fixed
+from .odeint_adjoint import (
+    odeint_adjoint,
+    odeint_adjoint_batched,
+    odeint_adjoint_fixed,
+)
+from .odeint_naive import (
+    odeint_naive,
+    odeint_naive_batched,
+    odeint_naive_fixed,
+)
+from .stepper import rk_step, rk_step_batched
 from .tableaus import (
     ADAPTIVE_SOLVERS,
     FIXED_SOLVERS,
@@ -25,11 +39,12 @@ from .tableaus import (
 __all__ = [
     "odeint", "odeint_final", "GRAD_METHODS",
     "ControllerConfig", "SolveStats", "Checkpoints",
-    "adaptive_while_solve", "fixed_grid_solve",
+    "adaptive_while_solve", "batched_adaptive_while_solve",
+    "fixed_grid_solve",
     "NodeConfig", "node_block_apply",
-    "odeint_aca", "odeint_aca_fixed",
-    "odeint_adjoint", "odeint_adjoint_fixed",
-    "odeint_naive", "odeint_naive_fixed",
-    "rk_step", "Tableau", "get_tableau",
+    "odeint_aca", "odeint_aca_batched", "odeint_aca_fixed",
+    "odeint_adjoint", "odeint_adjoint_batched", "odeint_adjoint_fixed",
+    "odeint_naive", "odeint_naive_batched", "odeint_naive_fixed",
+    "rk_step", "rk_step_batched", "Tableau", "get_tableau",
     "ADAPTIVE_SOLVERS", "FIXED_SOLVERS",
 ]

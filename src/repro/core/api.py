@@ -5,26 +5,45 @@
                        grad_method="aca",        # aca | adjoint | naive
                        rtol=1e-6, atol=1e-6,
                        max_steps=256,            # checkpoint capacity
+                       max_trials=12,            # stepsize trials per step
                        steps_per_interval=8,     # fixed-grid solvers
-                       use_pallas=False)         # fused flat-state kernels
+                       trial_budget=None,        # naive-method tape bound
+                       use_pallas=False,         # fused flat-state kernels
+                       batch_axis=None)          # per-sample batched solve
 
 ``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` sorted ascending,
 ``ys[k] = z(ts[k])`` with ``ys[0] = z0``.  Gradients flow to ``z0`` and
 ``args`` under every method; the methods differ exactly as the paper's
 Table 1 describes.
+
+With ``batch_axis=a``, leaves of ``z0`` carry a batch dimension at axis
+``a`` and ``f`` stays *per-sample*: each batch element is integrated on
+its own adaptive grid (own stepsize controller, own accept/reject, own
+checkpoint buffer) instead of one lockstep decision for the whole batch —
+the semantics of ``jax.vmap`` over the unbatched solver, in one fused
+loop.  ``args`` are shared across the batch (their gradient is summed).
 """
 
 from __future__ import annotations
 
 from typing import Any, Callable, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 
 from .controller import ControllerConfig
 from .integrate import SolveStats
-from .odeint_aca import odeint_aca, odeint_aca_fixed
-from .odeint_adjoint import odeint_adjoint, odeint_adjoint_fixed
-from .odeint_naive import odeint_naive, odeint_naive_fixed
+from .odeint_aca import odeint_aca, odeint_aca_batched, odeint_aca_fixed
+from .odeint_adjoint import (
+    odeint_adjoint,
+    odeint_adjoint_batched,
+    odeint_adjoint_fixed,
+)
+from .odeint_naive import (
+    odeint_naive,
+    odeint_naive_batched,
+    odeint_naive_fixed,
+)
 from .tableaus import Tableau, get_tableau
 
 PyTree = Any
@@ -47,8 +66,19 @@ def odeint(
     steps_per_interval: int = 8,
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
+    batch_axis: Optional[int] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """See module docstring for the solver × grad-method matrix.
+
+    Adaptive-solver budgets: ``max_steps`` caps the number of *accepted*
+    steps (it is also the checkpoint-buffer capacity, the paper's N_t
+    bound — ``stats.overflow`` is set when the solve runs out before the
+    last eval time); ``max_trials`` bounds the paper's inner stepsize
+    search m, so the total ψ-trial budget of one solve is ``max_steps *
+    max_trials``.  ``trial_budget`` (naive method only) overrides that
+    product as the length of the differentiable solver tape: reverse-mode
+    AD stores residuals for every budgeted trial, so it is *the* memory
+    knob of the naive method.
 
     ``use_pallas=True`` enables the fused flat-state fast path: the
     state pytree is raveled once per solve and every ψ trial (stage
@@ -62,6 +92,22 @@ def odeint(
     could in principle decide differently) and gradients flow through
     all three methods.  States whose leaves mix dtypes (or are not
     inexact) silently fall back to the pytree path.
+
+    ``batch_axis=a`` enables the per-sample batched mode: every leaf of
+    ``z0`` carries a batch dimension at axis ``a`` (one shared batch
+    size B) while ``f`` remains the per-sample vector field.  Adaptive
+    solvers then give every element its own stepsize-controller state,
+    accept/reject mask and checkpoint row inside one fused while_loop —
+    matching ``jax.vmap`` of the unbatched solver instead of degrading
+    the stepsize search to one lockstep decision — and all three
+    gradient methods replay/re-integrate per element.  Outputs gain the
+    leading time axis as usual: ``ys[k]`` has the shape of the batched
+    ``z0`` (batch at axis ``a`` of each state leaf), and ``stats``
+    fields become (B,) per-element counters; an element that has landed
+    on its last ``ts[k]`` stops accumulating f-evals while stragglers
+    finish.  Composes with ``use_pallas`` (batched fused kernels with
+    per-row error norms); fixed-grid solvers share one exact grid, so
+    batching is lossless there.
     """
     tab = get_tableau(solver) if isinstance(solver, str) else solver
     ts = jnp.asarray(ts)
@@ -71,6 +117,13 @@ def odeint(
         raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
 
     cfg = ControllerConfig(max_steps=max_steps, max_trials=max_trials)
+
+    if batch_axis is not None:
+        return _odeint_batched(
+            f, z0, ts, args, tab=tab, grad_method=grad_method,
+            batch_axis=batch_axis, rtol=rtol, atol=atol, cfg=cfg,
+            steps_per_interval=steps_per_interval,
+            trial_budget=trial_budget, use_pallas=use_pallas)
 
     if tab.adaptive:
         if grad_method == "aca":
@@ -96,6 +149,88 @@ def odeint(
                               use_pallas=use_pallas)
 
 
+def _odeint_batched(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree,
+    *,
+    tab: Tableau,
+    grad_method: str,
+    batch_axis: int,
+    rtol: float,
+    atol: float,
+    cfg: ControllerConfig,
+    steps_per_interval: int,
+    trial_budget: Optional[int],
+    use_pallas: bool,
+) -> Tuple[PyTree, SolveStats]:
+    """Batched dispatch behind ``odeint(..., batch_axis=a)``.
+
+    Normalizes the batch dim to axis 0, routes adaptive tableaus to the
+    per-sample batched solvers and fixed grids to the (lossless) shared
+    grid with a vmapped field, then restores the caller's batch axis in
+    ``ys`` (which sits one axis deeper under the leading time axis).
+    """
+    leaves = jax.tree.leaves(z0)
+    if not leaves:
+        raise ValueError("batch_axis requires a non-empty state")
+    # normalize per leaf: leaves may have different ranks, and a negative
+    # axis must resolve before the != 0 checks and the ys restore below
+    axes = jax.tree.map(lambda l: batch_axis % l.ndim, z0)
+    sizes = {l.shape[a] for l, a in zip(leaves, jax.tree.leaves(axes))}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"all state leaves must share one batch size at axis "
+            f"{batch_axis}; got {sorted(sizes)}")
+    B = sizes.pop()
+
+    z0 = jax.tree.map(
+        lambda l, a: jnp.moveaxis(l, a, 0) if a else l, z0, axes)
+
+    if tab.adaptive:
+        if grad_method == "aca":
+            ys, stats = odeint_aca_batched(
+                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                cfg=cfg, use_pallas=use_pallas)
+        elif grad_method == "adjoint":
+            ys, stats = odeint_adjoint_batched(
+                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                cfg=cfg, use_pallas=use_pallas)
+        else:
+            ys, stats = odeint_naive_batched(
+                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                cfg=cfg, trial_budget=trial_budget, use_pallas=use_pallas)
+    else:
+        # fixed grids are identical for every element — lockstep IS the
+        # per-sample grid; vmap the field over the batched state and
+        # reuse the unbatched front-ends unchanged
+        fb = lambda t, z, *a: jax.vmap(
+            lambda zi: f(t, zi, *a), in_axes=0)(z)
+        if grad_method == "aca":
+            ys, stats = odeint_aca_fixed(
+                fb, z0, ts, args, solver=tab,
+                steps_per_interval=steps_per_interval,
+                use_pallas=use_pallas)
+        elif grad_method == "adjoint":
+            ys, stats = odeint_adjoint_fixed(
+                fb, z0, ts, args, solver=tab,
+                steps_per_interval=steps_per_interval,
+                use_pallas=use_pallas)
+        else:
+            ys, stats = odeint_naive_fixed(
+                fb, z0, ts, args, solver=tab,
+                steps_per_interval=steps_per_interval,
+                use_pallas=use_pallas)
+        stats = SolveStats(*(jnp.broadcast_to(s, (B,)) for s in stats))
+
+    # ys leaves are (n_eval, B, ...): the batch dim sits one axis deeper
+    # than it did in each z0 leaf, under the leading time axis
+    ys = jax.tree.map(
+        lambda l, a: jnp.moveaxis(l, 1, a + 1) if a else l, ys, axes)
+    return ys, stats
+
+
 def odeint_final(
     f: Callable,
     z0: PyTree,
@@ -104,8 +239,10 @@ def odeint_final(
     args: PyTree = (),
     **kw,
 ) -> Tuple[PyTree, SolveStats]:
-    """Convenience: integrate [t0, t1], return only z(t1) (NODE block use)."""
-    import jax
+    """Convenience: integrate [t0, t1], return only z(t1) (NODE block use).
 
+    Accepts every ``odeint`` keyword, including ``batch_axis`` — the
+    returned z(t1) then keeps the batch dimension where ``z0`` had it.
+    """
     ys, stats = odeint(f, z0, jnp.asarray([t0, t1], jnp.float32), args, **kw)
     return jax.tree.map(lambda y: y[-1], ys), stats

@@ -22,6 +22,13 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ControllerConfig:
+    """PI stepsize-controller settings + the solve's step/trial budgets.
+
+    ``max_steps`` bounds *accepted* steps (= checkpoint-buffer capacity,
+    the paper's N_t); ``max_trials`` bounds the inner stepsize search per
+    step (the paper's m), so one solve performs at most ``max_steps *
+    max_trials`` ψ trials.
+    """
     safety: float = 0.9
     min_factor: float = 0.2     # max shrink per retry
     max_factor: float = 10.0    # max growth after accept

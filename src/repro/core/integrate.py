@@ -7,13 +7,28 @@ Two engines over the same Runge-Kutta stepper:
   and outer time advance fused into one loop).  Dynamic trip count, *not*
   reverse-differentiable — used by ACA forward (with trajectory
   checkpoints), by the adjoint method's forward and backward solves, and
-  for inference.  Accepted discretization points (t_i, h_i, z_i) are
-  written into a fixed-capacity buffer: the paper's trajectory checkpoint.
+  for inference.  With ``use_pallas=True`` the trial step and its error
+  norm run as fused flat-state Pallas kernels over the raveled state (see
+  ``stepper.py``); the loop logic is identical.  Accepted discretization
+  points (t_i, h_i, z_i) are written into a fixed-capacity buffer: the
+  paper's trajectory checkpoint.
+
+* ``batched_adaptive_while_solve`` — the per-sample batched engine behind
+  ``odeint(..., batch_axis=0)``.  One fused ``lax.while_loop`` advances
+  all live batch elements each iteration, but every element carries its
+  *own* controller state (stepsize, PI memory, trial counter), its own
+  accept/reject decision and its own ``Checkpoints`` row — Algorithm 1's
+  stepsize search runs per trajectory, not in lockstep.  Rejected and
+  finished elements are frozen with ``jnp.where`` masking (and h = 0
+  through the stepper, an exact identity), so an element that has landed
+  on its last ``ts[k]`` stops contributing f-evals to its ``SolveStats``
+  and its buffers stay bit-stable while stragglers finish.  The loop
+  terminates when *all* elements are done.
 
 * ``fixed_grid_solve`` — ``lax.scan`` over a precomputed grid.  Fully
   differentiable (this is also the "naive" method for fixed-step solvers).
 
-Both engines integrate through a sorted array of evaluation times ``ts``
+All engines integrate through a sorted array of evaluation times ``ts``
 (the solver is forced to land exactly on each ``ts[k]``), supporting
 latent-ODE style multi-time outputs.  States are arbitrary pytrees.
 """
@@ -26,13 +41,24 @@ import jax
 import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
-from .stepper import error_ratio, maybe_flatten, rk_step
+from .stepper import (
+    error_ratio,
+    maybe_flatten,
+    rk_step,
+    rk_step_batched,
+)
 from .tableaus import Tableau
 
 PyTree = Any
 
 
 class SolveStats(NamedTuple):
+    """Solver cost counters for one solve.
+
+    Scalars for an unbatched solve; shape (B,) per-element arrays for a
+    batched solve (``batch_axis``), where a finished element's counters
+    stop advancing while stragglers integrate on.
+    """
     n_steps: jnp.ndarray      # accepted steps (paper's N_t)
     n_trials: jnp.ndarray     # total ψ trials (N_t * m)
     nfe: jnp.ndarray          # number of f evaluations
@@ -45,6 +71,11 @@ class Checkpoints(NamedTuple):
     ``z`` holds z_i at the *start* of accepted interval i; ``t``/``h`` its
     start time and accepted stepsize; ``out_idx`` the index into ``ts`` that
     the interval's endpoint landed on (or -1).  Only slots [0, n) are valid.
+
+    Batched solves reuse the same structure with a leading batch dim:
+    ``t``/``h``/``out_idx`` become (B, max_steps), ``z`` leaves
+    (B, max_steps, ...) and ``n`` (B,) — each element records its *own*
+    accepted grid, which the ACA backward sweep replays per element.
     """
     t: jnp.ndarray            # (max_steps,)
     h: jnp.ndarray            # (max_steps,)
@@ -201,6 +232,181 @@ def adaptive_while_solve(
             i=i + accept.astype(jnp.int32),
             eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
             trials=c["trials"] + 1,
+            nfe=nfe,
+            ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
+            ckpt_oi=ckpt_oi,
+        )
+
+    c = jax.lax.while_loop(cond, body, carry0)
+
+    overflow = c["eval_idx"] < n_eval
+    ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
+                        out_idx=c["ckpt_oi"], n=c["i"])
+    stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
+                       overflow=overflow)
+    return c["ys"], ckpts, stats
+
+
+def _bwhere(pred, a, b):
+    """jnp.where with a (B,) predicate broadcast over batch-leading leaves."""
+    return jnp.where(pred.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+
+
+def _bwhere_tree(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: _bwhere(pred, x, y), a, b)
+
+
+def batched_adaptive_while_solve(
+    tab: Tableau,
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: Tuple,
+    rtol: float,
+    atol: float,
+    cfg: ControllerConfig,
+    h0: Optional[jnp.ndarray] = None,
+    use_pallas: bool = False,
+) -> Tuple[PyTree, Checkpoints, SolveStats]:
+    """Per-sample batched adaptive solve: one fused while_loop, one
+    stepsize controller *per batch element*.
+
+    ``z0`` leaves carry a leading batch dim B; ``f`` is the per-sample
+    vector field (no batch dim — it is vmapped inside the stepper).
+    Returns (ys, checkpoints, stats) where ``ys`` leaves are
+    (len(ts), B, ...) with ys[0] = z0, checkpoints/stats carry per-element
+    rows (see ``Checkpoints`` / ``SolveStats``).  Not
+    reverse-differentiable (while_loop) — wrap in custom_vjp (ACA /
+    adjoint) or use only for inference.
+
+    Each iteration advances every *live* element one ψ trial with its own
+    trial stepsize; per-element accept/reject masks (``jnp.where``
+    freezing, h = 0 for dead rows) keep rejected and finished elements
+    bit-stable, and the loop runs until all elements have landed on their
+    last ``ts[k]`` (or exhausted their step/trial budget).  ``use_pallas``
+    expects an already-flat (B, N) state (``stepper.maybe_flatten_batched``)
+    and runs every trial through the batched fused kernels with per-row
+    error norms.
+    """
+    if not tab.adaptive:
+        raise ValueError("batched_adaptive_while_solve requires an "
+                         "embedded adaptive tableau")
+    B = jax.tree.leaves(z0)[0].shape[0]
+    rows = jnp.arange(B)
+    n_eval = ts.shape[0]
+    tdt = ts.dtype
+    max_steps = cfg.max_steps
+    max_total_trials = max_steps * cfg.max_trials
+    targs = args
+
+    if h0 is None:
+        h0 = jax.vmap(lambda z: initial_stepsize(
+            f, ts[0], z, targs, tab.order, rtol, atol))(z0)
+    h0 = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
+
+    ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
+
+    ckpt_t = jnp.zeros((B, max_steps), tdt)
+    ckpt_h = jnp.zeros((B, max_steps), tdt)
+    ckpt_z = jax.tree.map(
+        lambda l: jnp.zeros((l.shape[0], max_steps) + l.shape[1:],
+                            l.dtype), z0)
+    ckpt_oi = jnp.full((B, max_steps), -1, jnp.int32)
+
+    fb0 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))
+    k0 = fb0(jnp.full((B,), ts[0], tdt), z0)
+    nfe0 = jnp.full((B,), 1 + 2, jnp.int32)  # hinit costs 2 evals per elt
+
+    carry0 = dict(
+        t=jnp.full((B,), ts[0], tdt), z=z0, k0=k0, h=h0,
+        prev_ratio=jnp.ones((B,), jnp.float32),
+        i=jnp.zeros((B,), jnp.int32),           # accepted steps so far
+        eval_idx=jnp.ones((B,), jnp.int32),     # next ts[] to hit
+        trials=jnp.zeros((B,), jnp.int32),
+        nfe=nfe0,
+        ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
+    )
+
+    tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+
+    def live_mask(c):
+        return (
+            (c["eval_idx"] < n_eval)
+            & (c["i"] < max_steps)
+            & (c["trials"] < max_total_trials)
+        )
+
+    def cond(c):
+        return jnp.any(live_mask(c))
+
+    def body(c):
+        live = live_mask(c)
+        t, z, h = c["t"], c["z"], c["h"]
+        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]   # (B,)
+        h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        # dead elements step with h = 0: ψ degenerates to the identity
+        h_use = jnp.where(live, jnp.clip(h, h_min, t_target - t),
+                          jnp.zeros((), tdt))
+        res = rk_step_batched(tab, f, t, z, h_use, targs, k0=c["k0"],
+                              use_pallas=use_pallas,
+                              err_scale=(rtol, atol))
+        ratio = res.err_ratio                                   # (B,)
+        accept = live & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+
+        t_new = t + h_use
+        hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
+            jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # --- on accept: write each element's own checkpoint row ----------
+        i_c = jnp.minimum(c["i"], max_steps - 1)
+        ckpt_t = c["ckpt_t"].at[rows, i_c].set(
+            jnp.where(accept, t, c["ckpt_t"][rows, i_c]))
+        ckpt_h = c["ckpt_h"].at[rows, i_c].set(
+            jnp.where(accept, h_use, c["ckpt_h"][rows, i_c]))
+        ckpt_z = jax.tree.map(
+            lambda b, v: b.at[rows, i_c].set(_bwhere(accept, v,
+                                                     b[rows, i_c])),
+            c["ckpt_z"], z)
+        oi_val = jnp.where(hit, c["eval_idx"], jnp.full((B,), -1,
+                                                        jnp.int32))
+        ckpt_oi = c["ckpt_oi"].at[rows, i_c].set(
+            jnp.where(accept, oi_val, c["ckpt_oi"][rows, i_c]))
+
+        # --- on eval-time hit: record that element's output --------------
+        e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
+        ys = jax.tree.map(
+            lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
+            c["ys"], res.z_next)
+
+        # --- per-element stepsize control ---------------------------------
+        h_next = propose_stepsize(
+            cfg, h_use, ratio, c["prev_ratio"], tab.order)
+        h_next = jnp.asarray(h_next, tdt)
+
+        # FSAL / first-stage reuse, per element (see adaptive_while_solve)
+        if tab.fsal:
+            k0_acc = res.k_last
+            nfe_acc = jnp.zeros((B,), jnp.int32)
+        else:
+            k0_acc = jax.vmap(lambda ti, zi: f(ti, zi, *targs))(
+                t_new, res.z_next)
+            nfe_acc = jnp.ones((B,), jnp.int32)
+        k0_new = _bwhere_tree(accept, k0_acc, c["k0"])
+        # finished elements take the h=0 identity trial for free: only
+        # live elements pay f-evals in the per-element stats
+        nfe = c["nfe"] + jnp.where(live, tab.stages - 1, 0) \
+            + jnp.where(accept, nfe_acc, 0)
+
+        return dict(
+            t=jnp.where(accept, t_new, t),
+            z=_bwhere_tree(accept, res.z_next, z),
+            k0=k0_new,
+            h=jnp.where(live, h_next, h),
+            prev_ratio=jnp.where(
+                accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
+            i=c["i"] + accept.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            trials=c["trials"] + live.astype(jnp.int32),
             nfe=nfe,
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
             ckpt_oi=ckpt_oi,

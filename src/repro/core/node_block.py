@@ -33,6 +33,14 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class NodeConfig:
+    """Solver/gradient configuration of one continuous-depth (NODE) block.
+
+    Defaults follow the paper's training setup (HeunEuler, ACA,
+    rtol=atol=1e-2).  ``regime`` picks dynamic adaptive stepping vs the
+    static fixed grid used at pod scale; ``use_pallas`` enables the
+    fused flat-state solver kernels; ``batch_axis`` turns on per-sample
+    batched solving (see ``odeint``).
+    """
     enabled: bool = False
     solver: str = "heun_euler"      # the paper trains with HeunEuler
     grad_method: str = "aca"
@@ -43,6 +51,10 @@ class NodeConfig:
     regime: str = "adaptive"        # adaptive | fixed
     t1: float = 1.0
     use_pallas: bool = False        # fused flat-state solver kernels
+    # per-sample batched solving: axis of z0 carrying the batch (None =
+    # lockstep).  With a batch axis every sample in the block's input
+    # integrates on its own adaptive grid — see odeint(batch_axis=...).
+    batch_axis: Optional[int] = None
 
 
 def node_block_apply(
@@ -66,6 +78,7 @@ def node_block_apply(
             grad_method=cfg.grad_method,
             steps_per_interval=cfg.steps_per_interval,
             use_pallas=cfg.use_pallas,
+            batch_axis=cfg.batch_axis,
         )
     else:
         zT, _ = odeint_final(
@@ -75,6 +88,7 @@ def node_block_apply(
             rtol=cfg.rtol, atol=cfg.atol,
             max_steps=cfg.max_steps,
             use_pallas=cfg.use_pallas,
+            batch_axis=cfg.batch_axis,
         )
     return zT
 

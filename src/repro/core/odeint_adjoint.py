@@ -23,8 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from .controller import ControllerConfig
-from .integrate import SolveStats, adaptive_while_solve, fixed_grid_solve
-from .stepper import flatten_problem, maybe_flatten
+from .integrate import (
+    SolveStats,
+    adaptive_while_solve,
+    batched_adaptive_while_solve,
+    fixed_grid_solve,
+)
+from .stepper import flatten_problem, maybe_flatten, maybe_flatten_batched
 from .tableaus import Tableau
 
 PyTree = Any
@@ -148,6 +153,101 @@ def odeint_adjoint(
     ys, stats = solve(z0, args, ts)
     if unravel is not None:
         ys = jax.vmap(unravel)(ys)
+    return ys, stats
+
+
+def _solve_segment_adaptive_batched(solver, g, aug, s_seg, args, rtol,
+                                    atol, cfg, use_pallas):
+    """One reverse-time segment of the batched augmented system: the
+    per-sample augmented pytree (z̄_b, λ_b, ḡ_b) rides the same masked
+    batched engine as the forward solve, so every element re-integrates
+    on its own reverse grid; ``use_pallas`` ravels each sample's
+    augmented state into one (B, N) carry for the batched kernels."""
+    gf, augf, unravel, up = maybe_flatten_batched(g, aug, use_pallas)
+    ys_seg, _, _ = batched_adaptive_while_solve(
+        solver, gf, augf, s_seg, (args,), rtol, atol, cfg, use_pallas=up)
+    end = jax.tree.map(lambda y: y[-1], ys_seg)
+    if unravel is not None:
+        end = jax.vmap(unravel)(end)
+    return end
+
+
+def odeint_adjoint_batched(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    solver: Tableau,
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    cfg: Optional[ControllerConfig] = None,
+    use_pallas: bool = False,
+) -> Tuple[PyTree, SolveStats]:
+    """Per-sample batched adjoint: ``odeint(..., batch_axis=0)``'s
+    adjoint path.
+
+    Forward: ``batched_adaptive_while_solve`` over the per-sample state
+    (each element on its own grid, O(N_f) residuals kept).  Backward:
+    the augmented system (z̄, λ, ḡ) is solved in reverse per element by
+    the same masked batched engine; ḡ is carried per element and summed
+    over the batch at the end (args are shared).  Returns (ys, stats)
+    with ys leaves (len(ts), B, ...) and per-element stats.
+    """
+    if cfg is None:
+        cfg = ControllerConfig()
+    if not solver.adaptive:
+        raise ValueError("adjoint baseline expects an adaptive tableau; "
+                         "fixed-grid adjoint == ANODE-style, see "
+                         "odeint_adjoint_fixed")
+
+    f, z0, unravel, use_pallas = maybe_flatten_batched(f, z0, use_pallas)
+
+    @jax.custom_vjp
+    def solve(z0, args, ts):
+        ys, _, stats = batched_adaptive_while_solve(
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
+            use_pallas=use_pallas)
+        return ys, stats
+
+    def solve_fwd(z0, args, ts):
+        ys, _, stats = batched_adaptive_while_solve(
+            solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
+            use_pallas=use_pallas)
+        # residuals: ONLY the eval-time states — O(N_f) memory per element
+        return (ys, stats), (ys, args, ts)
+
+    def solve_bwd(res, cot):
+        ys, args, ts = res
+        g_ys, _ = cot
+        n_eval = ts.shape[0]
+        B = jax.tree.leaves(ys)[0].shape[1]
+        g_aug = _aug_dynamics(f)
+
+        zT = jax.tree.map(lambda y: y[-1], ys)          # (B, ...)
+        lam = jax.tree.map(lambda g: g[-1], g_ys)
+        gargs = jax.tree.map(
+            lambda a: jnp.zeros((B,) + jnp.shape(a),
+                                jnp.result_type(a)), args)
+        aug = (zT, lam, gargs)
+
+        for k in range(n_eval - 2, -1, -1):
+            s_seg = jnp.stack([-ts[k + 1], -ts[k]])
+            aug = _solve_segment_adaptive_batched(
+                solver, lambda s, a, ar: g_aug(s, a, ar), aug, s_seg,
+                args, rtol, atol, cfg, use_pallas)
+            zk, lam, gargs = aug
+            lam = jax.tree.map(lambda l, g: l + g[k], lam, g_ys)
+            aug = (zk, lam, gargs)
+
+        _, lam, gargs = aug
+        gargs = jax.tree.map(lambda g: g.sum(axis=0), gargs)
+        return lam, gargs, jnp.zeros_like(ts)
+
+    solve.defvjp(solve_fwd, solve_bwd)
+    ys, stats = solve(z0, args, ts)
+    if unravel is not None:
+        ys = jax.vmap(jax.vmap(unravel))(ys)
     return ys, stats
 
 

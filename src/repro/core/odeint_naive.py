@@ -22,8 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
-from .integrate import SolveStats, fixed_grid_solve
-from .stepper import error_ratio, maybe_flatten, rk_step
+from .integrate import (
+    SolveStats,
+    _buffer_set,
+    _bwhere,
+    _empty_buffer,
+    fixed_grid_solve,
+)
+from .stepper import (
+    error_ratio,
+    maybe_flatten,
+    maybe_flatten_batched,
+    rk_step,
+    rk_step_batched,
+)
 from .tableaus import Tableau
 
 PyTree = Any
@@ -136,6 +148,121 @@ def odeint_naive(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
         n_trials=jnp.asarray(budget, jnp.int32),
         nfe=jnp.asarray(budget * solver.stages, jnp.int32),
+        overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
+    )
+    return ys_out, stats
+
+
+def odeint_naive_batched(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    solver: Tableau,
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    cfg: Optional[ControllerConfig] = None,
+    trial_budget: Optional[int] = None,
+    use_pallas: bool = False,
+) -> Tuple[PyTree, SolveStats]:
+    """Per-sample batched naive method: ``odeint(..., batch_axis=0)``
+    with direct backprop through the masked solver scan.
+
+    ``z0`` leaves carry a leading batch dim B and ``f`` is per-sample.
+    The bounded ``lax.scan`` advances every element each iteration with
+    its own trial stepsize, accept/reject mask and differentiable
+    stepsize chain; finished elements are where-frozen (they keep taking
+    discarded h_min trials — a zero step's error norm would put sqrt(0)
+    on the tape and NaN the backward pass), so reverse-mode AD through
+    the scan yields each element's own discretize-then-optimize gradient —
+    including the per-element stepsize-search graph the paper
+    criticizes.  ``trial_budget`` bounds the scan length (shared across
+    elements); defaults to cfg.max_steps * cfg.max_trials.
+    """
+    if cfg is None:
+        cfg = ControllerConfig()
+    if not solver.adaptive:
+        raise ValueError(
+            "odeint_naive_batched requires an embedded adaptive tableau; "
+            "fixed grids batch losslessly through odeint_naive_fixed")
+
+    f, z0, unravel, use_pallas = maybe_flatten_batched(f, z0, use_pallas)
+
+    B = jax.tree.leaves(z0)[0].shape[0]
+    rows = jnp.arange(B)
+    n_eval = ts.shape[0]
+    tdt = ts.dtype
+    budget = trial_budget if trial_budget is not None else (
+        cfg.max_steps * cfg.max_trials)
+    tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+    targs = _as_tuple(args)
+
+    h_init = jax.vmap(lambda z: initial_stepsize(
+        f, ts[0], z, targs, solver.order, rtol, atol))(z0)
+
+    ys0 = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
+
+    carry0 = dict(
+        t=jnp.full((B,), ts[0], tdt), z=z0,
+        h=jnp.asarray(h_init, tdt),
+        prev_ratio=jnp.ones((B,), jnp.float32),
+        eval_idx=jnp.ones((B,), jnp.int32),
+        n_acc=jnp.zeros((B,), jnp.int32),
+        ys=ys0,
+    )
+
+    def body(c, _):
+        done = c["eval_idx"] >= n_eval                      # (B,)
+        t, z, h = c["t"], c["z"], c["h"]
+        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
+        h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        # done elements keep stepping with h_min (their carry is frozen by
+        # the where-masks below) rather than h = 0: a zero step has zero
+        # error, and backprop through sqrt(0) in the error norm is NaN
+        h_use = jnp.clip(h, h_min, jnp.maximum(t_target - t, h_min))
+
+        # NOTE: no k0 caching here — the naive method re-records the whole
+        # trial in the graph, including the first stage (per element).
+        res = rk_step_batched(solver, f, t, z, h_use, targs,
+                              use_pallas=use_pallas, err_scale=(rtol, atol))
+        ratio = res.err_ratio                               # (B,)
+        accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+
+        t_new = t + h_use
+        hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
+            jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
+        ys = jax.tree.map(
+            lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
+            c["ys"], res.z_next)
+
+        # differentiable per-element stepsize chain: gradient flows
+        # through each element's own `ratio` into its h_next.
+        h_next = propose_stepsize(cfg, h_use, ratio, c["prev_ratio"],
+                                  solver.order).astype(tdt)
+
+        c_new = dict(
+            t=jnp.where(accept, t_new, t),
+            z=jax.tree.map(lambda a, b: _bwhere(accept, a, b), res.z_next, z),
+            h=jnp.where(done, h, h_next),
+            prev_ratio=jnp.where(accept, jnp.maximum(ratio, 1e-10),
+                                 c["prev_ratio"]),
+            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            n_acc=c["n_acc"] + accept.astype(jnp.int32),
+            ys=ys,
+        )
+        return c_new, None
+
+    c, _ = jax.lax.scan(body, carry0, None, length=budget)
+    ys_out = c["ys"] if unravel is None else \
+        jax.vmap(jax.vmap(unravel))(c["ys"])
+
+    stats = SolveStats(
+        n_steps=jax.lax.stop_gradient(c["n_acc"]),
+        n_trials=jnp.full((B,), budget, jnp.int32),
+        nfe=jnp.full((B,), budget * solver.stages, jnp.int32),
         overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
     )
     return ys_out, stats

@@ -28,6 +28,13 @@ outputs — solver loops then carry a single (N,) array, which also
 shrinks the while_loop carry the checkpoint writer updates every trial.
 States with mixed or non-inexact dtypes return None and stay on the
 pytree path.
+
+``rk_step_batched`` is the per-sample batched twin of ``rk_step`` for
+``odeint(..., batch_axis=0)``: every leaf carries a leading batch dim B,
+``t`` and ``h`` are (B,) — each element takes ψ with its *own* time and
+trial stepsize — and ``err_ratio`` is (B,), one scaled error norm per
+element.  ``maybe_flatten_batched`` is the matching fallback rule: the
+fused path carries a (B, N) array through the batched Pallas kernels.
 """
 
 from __future__ import annotations
@@ -213,6 +220,135 @@ def rk_step(
     else:
         k_last = ks[0]
     return StepResult(z_next=z_next, err=err, k_last=k_last)
+
+
+def _is_flat_batched(z: PyTree) -> bool:
+    return (isinstance(z, jax.Array) and z.ndim == 2
+            and jnp.issubdtype(z.dtype, jnp.inexact))
+
+
+def maybe_flatten_batched(f: VecField, z0: PyTree, use_pallas: bool):
+    """Batched twin of ``maybe_flatten``: ``z0`` leaves carry a leading
+    batch dim B and ``f`` is the *per-sample* vector field.
+
+    Returns ``(f, z0, unravel, use_pallas)``: on success ``f`` is the
+    per-sample field over the raveled (N,) state, ``z0`` the (B, N)
+    batch of raveled states and ``unravel`` the per-sample inverse map
+    (vmap it over outputs); otherwise the inputs come back unchanged
+    with ``unravel=None`` and ``use_pallas=False`` (same fallback rules
+    as ``flatten_problem``: single inexact dtype or bust).
+    """
+    if not use_pallas:
+        return f, z0, None, False
+    sample = jax.tree.map(lambda l: l[0], z0)
+    flat = flatten_problem(f, sample)
+    if flat is None:
+        return f, z0, None, False
+    f_flat, _, unravel = flat
+    z0_flat = jax.vmap(lambda z: ravel_pytree(z)[0])(z0)
+    return f_flat, z0_flat, unravel, True
+
+
+def _tree_baxpy(h, x: PyTree, y: PyTree) -> PyTree:
+    """Per-row y + h_b * x over batch-leading pytrees, h of shape (B,)."""
+    return jax.tree.map(
+        lambda xi, yi: yi + (h.reshape((-1,) + (1,) * (xi.ndim - 1))
+                             * xi).astype(yi.dtype), x, y)
+
+
+def _rk_step_flat_batched(
+    tab: Tableau,
+    fb: Callable,
+    t: jnp.ndarray,
+    z: jnp.ndarray,
+    h: jnp.ndarray,
+    k0: Optional[jnp.ndarray],
+    err_scale: Optional[Tuple[float, float]],
+) -> StepResult:
+    """Fused batched ψ over a (B, N) state: per-row stepsizes, per-row
+    error norms.  ``fb`` maps ((B,), (B, N)) -> (B, N)."""
+    from repro.kernels import ops
+
+    k0v = k0 if k0 is not None else fb(t, z)
+    ks = jnp.zeros((tab.stages,) + z.shape, k0v.dtype).at[0].set(k0v)
+    for i in range(1, tab.stages):
+        zi = ops.rk_stage_increment_batched(z, ks[:i], h, tab.a[i])
+        ks = ks.at[i].set(fb(t + tab.c[i] * h, zi))
+
+    ratio = None
+    if tab.b_err is not None and err_scale is not None:
+        rtol, atol = err_scale
+        z_next, sq_sum = ops.rk_stage_combine_err_batched(
+            z, ks, h, tab.b, tab.b_err, rtol, atol)
+        ratio = jnp.sqrt(sq_sum / z.shape[-1])
+        err = None
+    else:
+        z_next = ops.rk_stage_increment_batched(z, ks, h, tab.b)
+        err = None
+    k_last = ks[-1] if tab.fsal else ks[0]
+    return StepResult(z_next=z_next, err=err, k_last=k_last,
+                      err_ratio=ratio)
+
+
+def rk_step_batched(
+    tab: Tableau,
+    f: VecField,
+    t: jnp.ndarray,
+    z: PyTree,
+    h: jnp.ndarray,
+    args: Tuple = (),
+    k0: Optional[PyTree] = None,
+    *,
+    use_pallas: bool = False,
+    err_scale: Optional[Tuple[float, float]] = None,
+) -> StepResult:
+    """One explicit RK step per batch element: ψ_{h_b}(t_b, z_b) for all
+    b at once.
+
+    ``f`` is the per-sample vector field (no batch dim); leaves of ``z``
+    carry a leading batch dim B; ``t`` and ``h`` are (B,).  With
+    ``err_scale=(rtol, atol)`` the result's ``err_ratio`` is the (B,)
+    vector of per-element scaled error norms (then ``err`` is None — no
+    consumer).  An element whose h_b is 0 passes through unchanged
+    bit-exactly: the masking contract the batched adaptive loop and the
+    ACA batched backward sweep use to freeze finished elements.
+
+    ``use_pallas=True`` dispatches (B, N) inexact states to the batched
+    fused kernels; other states take the vmapped pytree path.
+    """
+    fb = jax.vmap(lambda ti, zi: f(ti, zi, *args))
+    if use_pallas and _is_flat_batched(z):
+        return _rk_step_flat_batched(tab, fb, t, z, h, k0, err_scale)
+
+    ks = []
+    for i in range(tab.stages):
+        if i == 0:
+            ki = k0 if k0 is not None else fb(t, z)
+        else:
+            incr = _weighted_sum(tuple(ks), tab.a[i])
+            zi = _tree_baxpy(h, incr, z)
+            ki = fb(t + tab.c[i] * h, zi)
+        ks.append(ki)
+    ks = tuple(ks)
+
+    z_next = _tree_baxpy(h, _weighted_sum(ks, tab.b), z)
+
+    err = None
+    ratio = None
+    if tab.b_err is not None:
+        err = jax.tree.map(
+            lambda e: h.reshape((-1,) + (1,) * (e.ndim - 1)) * e,
+            _weighted_sum(ks, tab.b_err))
+        if err_scale is not None:
+            rtol, atol = err_scale
+            ratio = jax.vmap(
+                lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
+                    err, z, z_next)
+            err = None
+
+    k_last = ks[-1] if tab.fsal else ks[0]
+    return StepResult(z_next=z_next, err=err, k_last=k_last,
+                      err_ratio=ratio)
 
 
 def error_ratio(err: PyTree, z0: PyTree, z1: PyTree, rtol: float,

@@ -41,6 +41,11 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Tableau:
+    """Immutable Butcher tableau of one explicit RK method.
+
+    See the module docstring for the field semantics; ``adaptive`` is
+    derived from the presence of embedded-error weights ``b_err``.
+    """
     name: str
     a: Tuple[Tuple[float, ...], ...]
     b: Tuple[float, ...]
@@ -198,6 +203,12 @@ ADAPTIVE_SOLVERS = ("heun_euler", "bosh3", "dopri5")
 
 
 def get_tableau(name: str) -> Tableau:
+    """Look up a registered tableau by case/dash-insensitive name.
+
+    Accepted names: euler, midpoint, rk2/heun2, rk4 (fixed) and
+    heun_euler, bosh3/rk23/bogacki_shampine, dopri5/rk45 (adaptive).
+    Raises KeyError listing the registry for unknown names.
+    """
     key = name.lower().replace("-", "_")
     if key not in _REGISTRY:
         raise KeyError(

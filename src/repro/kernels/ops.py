@@ -20,11 +20,15 @@ from .flash_attention import flash_attention_pallas
 from .rg_lru import rg_lru_pallas
 from .rk_stage import (
     _BLOCK,
+    combine_err_batched_jnp,
     combine_err_jnp,
     combine_jnp,
+    increment_batched_jnp,
     increment_jnp,
+    rk_stage_combine_err_batched_pallas,
     rk_stage_combine_err_pallas,
     rk_stage_combine_pallas,
+    rk_stage_increment_batched_pallas,
     rk_stage_increment_pallas,
 )
 from .rmsnorm import rmsnorm_pallas
@@ -156,6 +160,76 @@ def rk_stage_combine_err(z, k, h, b, e, rtol, atol, *, with_err=True,
         return out
     zn, sq = out
     return zn, None, sq
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _rk_increment_batched(z, k, h, a, block, interpret):
+    return rk_stage_increment_batched_pallas(z, k, h, a, block=block,
+                                             interpret=interpret)
+
+
+def _rk_increment_batched_fwd(z, k, h, a, block, interpret):
+    return _rk_increment_batched(z, k, h, a, block, interpret), (z, k, h)
+
+
+def _rk_increment_batched_bwd(a, block, interpret, res, g):
+    z, k, h = res
+    _, vjp = jax.vjp(
+        lambda z_, k_, h_: increment_batched_jnp(z_, k_, h_, a), z, k, h)
+    return vjp(g)
+
+
+_rk_increment_batched.defvjp(_rk_increment_batched_fwd,
+                             _rk_increment_batched_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _rk_combine_err_batched(z, k, h, b, e, rtol, atol, block, interpret):
+    zn, partials = rk_stage_combine_err_batched_pallas(
+        z, k, h, b, e, rtol, atol, block=block, interpret=interpret)
+    return zn, partials.sum(axis=-1)
+
+
+def _rk_combine_err_batched_fwd(z, k, h, b, e, rtol, atol, block,
+                                interpret):
+    return (_rk_combine_err_batched(z, k, h, b, e, rtol, atol, block,
+                                    interpret), (z, k, h))
+
+
+def _rk_combine_err_batched_bwd(b, e, rtol, atol, block, interpret, res,
+                                g):
+    z, k, h = res
+    _, vjp = jax.vjp(
+        lambda z_, k_, h_: combine_err_batched_jnp(z_, k_, h_, b, e, rtol,
+                                                   atol), z, k, h)
+    return vjp(g)
+
+
+_rk_combine_err_batched.defvjp(_rk_combine_err_batched_fwd,
+                               _rk_combine_err_batched_bwd)
+
+
+def rk_stage_increment_batched(z, k, h, a, *, block=None):
+    """Per-row fused stage argument z + h_b·Σ_j a_j k_j over a (B, N)
+    batch; differentiable.  Rows with h_b = 0 pass through bit-exactly
+    (frozen-element masking of the batched solver)."""
+    return _rk_increment_batched(z, k, h, tuple(float(x) for x in a),
+                                 _BLOCK if block is None else int(block),
+                                 _interpret())
+
+
+def rk_stage_combine_err_batched(z, k, h, b, e, rtol, atol, *, block=None):
+    """Per-row fused combine + per-row Σ (err/(atol+rtol·max|z|))² over a
+    (B, N) batch; differentiable.
+
+    Returns (z_next (B, N), sq_sum (B,)); sqrt(sq_sum / N) is each batch
+    element's own ``error_ratio`` — the per-sample accept/reject signal.
+    The (B, N) err buffer is never materialized.
+    """
+    return _rk_combine_err_batched(
+        z, k, h, tuple(float(x) for x in b), tuple(float(x) for x in e),
+        float(rtol), float(atol),
+        _BLOCK if block is None else int(block), _interpret())
 
 
 def rmsnorm(x, w, eps: float = 1e-6, **kw):

@@ -21,6 +21,16 @@ baked into the kernel as compile-time constants (they come from the
 tableau), h arrives as a (1, 1) SMEM scalar.  ``*_ref`` companions in
 ``ref.py`` are the oracles; the differentiable dispatch wrappers live in
 ``ops.py``.
+
+Batched variants (``*_batched_pallas``) serve the per-sample batched
+solver (``odeint(..., batch_axis=0)``): the state is (B, N) with one
+stepsize *per row*, k is stacked (s, B, N), the grid is (rows × tiles)
+and the error norm is reduced **per row** — every batch element gets its
+own scaled-error partial sums, so the accept/reject decision is
+per-element instead of one global reduction over the whole batch.
+Masking of rejected/finished elements is by zeroed per-row h: a row with
+h = 0 computes z + 0·Σ… which round-trips bit-exactly through the f32
+accumulator, so frozen elements pass through unchanged.
 """
 
 from __future__ import annotations
@@ -73,6 +83,29 @@ def combine_err_jnp(z, k, h, b, e, rtol, atol, with_err=True):
     r = err / scale
     sq = jnp.sum(r * r)
     return (zn, err, sq) if with_err else (zn, sq)
+
+
+def increment_batched_jnp(z, k, h, a):
+    """(B, N) twin of ``increment_jnp`` with per-row stepsizes h (B,)."""
+    aw = jnp.asarray(tuple(a)[: k.shape[0]], jnp.float32)[:, None, None]
+    incr = (aw * k.astype(jnp.float32)).sum(0)          # (B, N)
+    hv = h.astype(jnp.float32)[:, None]
+    return (z.astype(jnp.float32) + hv * incr).astype(z.dtype)
+
+
+def combine_err_batched_jnp(z, k, h, b, e, rtol, atol):
+    """(B, N) twin of ``combine_err_jnp``: per-row combine + per-row
+    scaled-error square sums (B,)."""
+    kf = k.astype(jnp.float32)                          # (s, B, N)
+    bw = jnp.asarray(b, jnp.float32)[:, None, None]
+    ew = jnp.asarray(e, jnp.float32)[:, None, None]
+    hv = h.astype(jnp.float32)[:, None]
+    zn = (z.astype(jnp.float32) + hv * (bw * kf).sum(0)).astype(z.dtype)
+    err = hv * (ew * kf).sum(0)
+    scale = atol + rtol * jnp.maximum(
+        jnp.abs(z.astype(jnp.float32)), jnp.abs(zn.astype(jnp.float32)))
+    r = err / scale
+    return zn, jnp.sum(r * r, axis=-1)
 
 
 def _h_spec(interpret: bool):
@@ -285,3 +318,139 @@ def rk_stage_combine_err_pallas(
         return out, None, nrm
     err = outs[1][:n] if pad else outs[1]
     return out, err, nrm
+
+
+# --- batched (per-sample) kernels ----------------------------------------
+# One grid row per batch element; h is (B,) — each row advances with its
+# own trial stepsize, and the error norm partials are per row so the
+# controller can accept/reject elements independently (the whole point of
+# batch_axis: no lockstep).
+
+def _incr_batched_kernel(h_ref, z_ref, k_ref, out_ref, *, a):
+    h = h_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(z)
+    for j, aj in enumerate(a):
+        if aj != 0.0:
+            acc = acc + aj * k_ref[j, ...].astype(jnp.float32)
+    out_ref[...] = (z + h * acc).astype(out_ref.dtype)
+
+
+def rk_stage_increment_batched_pallas(
+    z: jnp.ndarray,          # (B, N) flattened per-sample states
+    k: jnp.ndarray,          # (s, B, N) stacked stage derivatives
+    h: jnp.ndarray,          # (B,) per-row stepsizes
+    a: Sequence[float],      # tableau row a[i][:j]
+    *,
+    block: int = _BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-row z + h_b · Σ_j a_j k_j, shape (B, N).
+
+    A row whose h_b is 0 passes through bit-exactly (the f32 round trip
+    of z + 0 is the identity) — the masking contract used by the batched
+    solver to freeze rejected/finished elements.
+    """
+    s, bsz, n = k.shape
+    assert z.shape == (bsz, n)
+    a = tuple(a)[:s]
+
+    pad = (-n) % block
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad)))
+    npad = n + pad
+    grid = (bsz, npad // block)
+    h2d = jnp.asarray(h, jnp.float32).reshape(bsz, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_incr_batched_kernel, a=a),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, i: (r, 0)),
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((s, 1, block), lambda r, i: (0, r, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, npad), z.dtype),
+        interpret=interpret,
+    )(h2d, z, k)
+    return out[:, :n] if pad else out
+
+
+def _combine_err_batched_kernel(h_ref, z_ref, k_ref, out_ref, nrm_ref, *,
+                                b, e, rtol, atol):
+    h = h_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(z)
+    err = jnp.zeros_like(z)
+    for i, (bi, ei) in enumerate(zip(b, e)):
+        ki = k_ref[i, ...].astype(jnp.float32)
+        if bi != 0.0:
+            acc = acc + bi * ki
+        if ei != 0.0:
+            err = err + ei * ki
+    zn = z + h * acc
+    err = h * err
+    out_ref[...] = zn.astype(out_ref.dtype)
+    scale = atol + rtol * jnp.maximum(jnp.abs(z), jnp.abs(zn))
+    r = err / scale
+    nrm_ref[0, 0] = jnp.sum(r * r)
+
+
+def rk_stage_combine_err_batched_pallas(
+    z: jnp.ndarray,          # (B, N) flattened per-sample states
+    k: jnp.ndarray,          # (s, B, N) stacked stage derivatives
+    h: jnp.ndarray,          # (B,) per-row stepsizes
+    b: Sequence[float],      # solution weights
+    e: Sequence[float],      # embedded-error weights
+    rtol: float,
+    atol: float,
+    *,
+    block: int = _BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (z_next (B, N), norm_partials (B, n_tiles)).
+
+    ``norm_partials[b, t]`` is element b's tile-t partial sum of
+    (err / (atol + rtol·max(|z|, |z_next|)))² — a **per-row** reduction:
+    summing axis -1 and dividing by N gives each element's own
+    ``error_ratio``², the quantity that makes per-sample accept/reject
+    possible.  Padded lanes use z=1, k=0 so they contribute exactly 0.
+    The err buffer is never materialized (the batched solver loop reads
+    only z_next and the norms); rows with h_b = 0 return z unchanged and
+    a zero norm (frozen-element masking).
+    """
+    s, bsz, n = k.shape
+    assert z.shape == (bsz, n)
+    b = tuple(b)
+    e = tuple(e)
+
+    pad = (-n) % block
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)), constant_values=1)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad)))
+    npad = n + pad
+    grid = (bsz, npad // block)
+    h2d = jnp.asarray(h, jnp.float32).reshape(bsz, 1)
+
+    out, nrm = pl.pallas_call(
+        functools.partial(_combine_err_batched_kernel, b=b, e=e,
+                          rtol=float(rtol), atol=float(atol)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, i: (r, 0)),
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((s, 1, block), lambda r, i: (0, r, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, npad), z.dtype),
+            jax.ShapeDtypeStruct((bsz, npad // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h2d, z, k)
+    return (out[:, :n] if pad else out), nrm

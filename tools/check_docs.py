@@ -1,0 +1,86 @@
+"""Docs health check, run by the CI docs job.
+
+Two gates:
+
+1. every relative link in ``README.md`` and ``docs/**/*.md`` resolves to
+   an existing file (anchors are stripped; absolute http(s)/mailto links
+   are skipped);
+2. every public symbol exported by ``repro.core`` (its ``__all__``) has a
+   real docstring — the auto-generated ``Name(field, ...)`` signature
+   docstring of dataclasses/NamedTuples does not count.
+
+Exits non-zero with one line per violation.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import inspect
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' extra ! is fine (same rule applies)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def check_links() -> list:
+    errors = []
+    md_files = [ROOT / "README.md"] + sorted((ROOT / "docs").rglob("*.md"))
+    for md in md_files:
+        if not md.exists():
+            errors.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def _is_auto_doc(obj) -> bool:
+    """Dataclass/NamedTuple auto docstrings look like 'Name(...)'."""
+    doc = obj.__doc__ or ""
+    name = getattr(obj, "__name__", "")
+    return doc.strip().startswith(f"{name}(")
+
+
+def check_docstrings() -> list:
+    import repro.core as core
+
+    errors = []
+    for sym in core.__all__:
+        obj = getattr(core, sym, None)
+        if obj is None:
+            errors.append(f"repro.core.{sym}: exported but missing")
+            continue
+        if not (inspect.isfunction(obj) or inspect.isclass(obj)
+                or inspect.ismodule(obj)):
+            continue  # plain data (tuples of names etc.)
+        doc = inspect.getdoc(obj)
+        if not doc or not doc.strip() or _is_auto_doc(obj):
+            errors.append(f"repro.core.{sym}: missing docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        return 1
+    print("docs check OK (links + public docstrings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
