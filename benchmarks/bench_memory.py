@@ -1,0 +1,117 @@
+"""Peak checkpoint memory vs horizon — the segmented-ACA memory claim.
+
+ACA's full trajectory checkpoint stores every accepted state: O(N_f ·
+dim) residual memory, which caps long-horizon workloads (three-body,
+long time series, deep NODE stacks).  ``checkpoint_segments=K`` bounds
+it to O((K + N_f/K) · dim) — K coarse snapshots plus one segment-length
+replay buffer — at ~1 extra ψ per accepted step in the backward sweep.
+
+Measured quantity: ``analyze_hlo`` ``bytes_min`` over the compiled
+value_and_grad HLO — the algorithm-intrinsic traffic of the saved
+buffers (the checkpoint dynamic-update-slices dominate; dynamic-trip
+while loops are counted once, so the number scales with *buffer size*,
+i.e. peak residency, not step count).  Two sweeps:
+
+  * ``K sweep`` at a fixed horizon the full buffer can still hold:
+    residual bytes must *shrink* as K grows toward ⌈√max_steps⌉
+    (asserted — this is the acceptance gate for the segmented mode);
+  * ``horizon sweep``: the full buffer grows ~linearly in max_steps
+    while ``checkpoint_segments="auto"`` grows ~√max_steps, opening
+    horizons the full buffer cannot hold.
+
+Headline numbers land in the shared JSON schema (``common.emit_json``),
+and therefore in ``BENCH_*.json`` when ``BENCH_ARTIFACT_DIR`` is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import odeint
+from repro.launch.hlo_cost import analyze_hlo
+from .common import emit, emit_json
+
+D = 32
+B = 8
+
+
+def _f(t, z, w1, w2):
+    return jnp.tanh(z @ w1) @ w2 - 0.1 * z
+
+
+def _residual_bytes(horizon_steps: int, segments) -> int:
+    """bytes_min of one compiled ACA value_and_grad at this capacity."""
+    w1 = jax.random.normal(jax.random.PRNGKey(0), (D, D)) * 0.4
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (D, D)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(2), (B, D))
+
+    def loss(w1, w2):
+        ys, _ = odeint(
+            _f, z0, jnp.array([0.0, 1.0]), (w1, w2),
+            solver="dopri5", grad_method="aca", rtol=1e-5, atol=1e-5,
+            max_steps=horizon_steps, max_trials=8,
+            checkpoint_segments=segments)
+        return (ys[-1] ** 2).mean()
+
+    g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1))
+                ).lower(w1, w2).compile()
+    return int(analyze_hlo(g.as_text()).bytes_min)
+
+
+def run(quick: bool = False):
+    base_steps = 192 if quick else 512
+    horizons = [64, base_steps] if quick else [64, 192, base_steps]
+    sqrt_k = int(-(-base_steps ** 0.5 // 1))
+
+    # --- K sweep at a horizon the full buffer can still hold ----------
+    k_values = [1, 4, sqrt_k]
+    by_k = {}
+    for k in [None] + k_values:
+        label = "full" if k is None else f"k{k}"
+        by_k[label] = _residual_bytes(base_steps, k)
+        emit(f"memory_residual_bytes/{label}", by_k[label],
+             f"analyze_hlo bytes_min, max_steps={base_steps}")
+
+    # the acceptance gate: state memory must shrink monotonically as K
+    # grows toward the sqrt(N) optimum of the O(K + N/K) cost model
+    seq = [by_k[f"k{k}"] for k in k_values]
+    assert seq == sorted(seq, reverse=True) and seq[-1] < by_k["full"], (
+        "segmented checkpointing did not shrink residual bytes", by_k)
+
+    # --- horizon sweep: full vs auto ----------------------------------
+    growth = {}
+    for steps in horizons:
+        if steps == base_steps:
+            # the K sweep already compiled these exact configurations
+            # ("auto" at base_steps resolves to sqrt_k)
+            full_b, auto_b = by_k["full"], by_k[f"k{sqrt_k}"]
+        else:
+            full_b = _residual_bytes(steps, None)
+            auto_b = _residual_bytes(steps, "auto")
+        growth[steps] = (full_b, auto_b)
+        emit(f"memory_horizon_bytes/full_{steps}", full_b,
+             "full buffer: O(N) state slots")
+        emit(f"memory_horizon_bytes/auto_{steps}", auto_b,
+             "checkpoint_segments='auto': O(sqrt N) state slots")
+
+    lo, hi = horizons[0], horizons[-1]
+    full_growth = growth[hi][0] / max(growth[lo][0], 1)
+    auto_growth = growth[hi][1] / max(growth[lo][1], 1)
+    emit_json("memory", {
+        "max_steps": base_steps,
+        "bytes_full": by_k["full"],
+        "bytes_k1": by_k["k1"],
+        f"bytes_k{sqrt_k}_sqrt": by_k[f"k{sqrt_k}"],
+        "sqrt_vs_full_ratio": round(by_k[f"k{sqrt_k}"] / by_k["full"], 4),
+        "horizon_growth_full": round(full_growth, 2),
+        "horizon_growth_auto": round(auto_growth, 2),
+    })
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

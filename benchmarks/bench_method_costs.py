@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import odeint
 from repro.launch.hlo_cost import analyze_hlo
-from .common import emit, timed
+from .common import emit, emit_json, timed
 
 D = 64
 
@@ -48,6 +48,7 @@ def run(quick: bool = False):
 
     variants = [("aca", False), ("adjoint", False), ("naive", False),
                 ("aca_pallas", True)]
+    headline = {}
     for label, use_pallas in variants:
         method = label.split("_")[0]
 
@@ -75,6 +76,10 @@ def run(quick: bool = False):
         emit(f"table1_residual_bytes/{label}", int(cost.bytes_min),
              "analyze_hlo bytes_min of value_and_grad HLO "
              "(saved-buffer + intrinsic traffic)")
+        headline[f"nfe_{label}"] = int(stats.nfe)
+        headline[f"grad_walltime_ms_{label}"] = round(dt * 1e3, 1)
+        headline[f"residual_bytes_{label}"] = int(cost.bytes_min)
+    emit_json("method_costs", headline)
 
 
 if __name__ == "__main__":

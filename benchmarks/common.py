@@ -1,8 +1,17 @@
-"""Shared benchmark utilities: timing + CSV / JSON emission."""
+"""Shared benchmark utilities: timing + CSV / JSON emission.
+
+With ``BENCH_ARTIFACT_DIR`` set, every ``emit_json`` headline is also
+appended to ``$BENCH_ARTIFACT_DIR/BENCH_<bench>.json`` (one JSON object
+per line) — the per-commit perf-trajectory artifacts CI uploads and
+``tools/check_bench_schema.py`` validates.
+"""
 
 from __future__ import annotations
 
 import json
+import os
+import pathlib
+import re
 import time
 from typing import Callable, Mapping
 
@@ -24,12 +33,21 @@ def emit_json(bench: str, metrics: Mapping) -> None:
 
     One line per benchmark, greppable as ``^{"bench"`` — the machine
     counterpart of the ``emit`` CSV rows.  Values must be plain
-    JSON-serializable scalars (floats/ints/strings).
+    JSON-serializable scalars (floats/ints/strings).  When the
+    ``BENCH_ARTIFACT_DIR`` env var names a directory, the line is also
+    appended to ``BENCH_<bench>.json`` there (see module docstring).
     """
     line = json.dumps({"bench": bench, "metrics": dict(metrics)},
                       sort_keys=True)
     ROWS.append(line)
     print(line, flush=True)
+    art_dir = os.environ.get("BENCH_ARTIFACT_DIR")
+    if art_dir:
+        path = pathlib.Path(art_dir)
+        path.mkdir(parents=True, exist_ok=True)
+        slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", bench)
+        with open(path / f"BENCH_{slug}.json", "a") as fh:
+            fh.write(line + "\n")
 
 
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:

@@ -13,9 +13,10 @@ import time
 import traceback
 
 from . import (bench_batched_solve, bench_classification,
-               bench_method_costs, bench_node_lm, bench_reliability,
-               bench_reverse_error, bench_solver_robustness,
-               bench_threebody, bench_timeseries, bench_toy_gradient)
+               bench_memory, bench_method_costs, bench_node_lm,
+               bench_reliability, bench_reverse_error,
+               bench_solver_robustness, bench_threebody,
+               bench_timeseries, bench_toy_gradient)
 from .common import emit
 
 BENCHES = [
@@ -29,6 +30,7 @@ BENCHES = [
     ("threebody (Table 5/Fig.8)", bench_threebody.run),
     ("node_lm (beyond-paper: LM ablation)", bench_node_lm.run),
     ("batched_solve (beyond-paper: batch_axis)", bench_batched_solve.run),
+    ("memory (beyond-paper: segmented ACA)", bench_memory.run),
 ]
 
 

@@ -53,8 +53,13 @@ def main():
     cfg = get_smoke_config("node18_cifar") if args.smoke \
         else get_config("node18_cifar")
     if args.adaptive:
-        node = dataclasses.replace(NODE_TRAIN, enabled=not args.discrete,
-                                   grad_method=args.grad_method)
+        node = dataclasses.replace(
+            NODE_TRAIN, enabled=not args.discrete,
+            grad_method=args.grad_method,
+            # segmented checkpointing is an ACA-only memory bound — drop
+            # it when the CLI switches to adjoint/naive
+            checkpoint_segments=(NODE_TRAIN.checkpoint_segments
+                                 if args.grad_method == "aca" else None))
     else:
         node = NodeConfig(enabled=not args.discrete, regime="fixed",
                           solver="rk2", grad_method=args.grad_method,

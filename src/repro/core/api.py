@@ -9,7 +9,8 @@
                        steps_per_interval=8,     # fixed-grid solvers
                        trial_budget=None,        # naive-method tape bound
                        use_pallas=False,         # fused flat-state kernels
-                       batch_axis=None)          # per-sample batched solve
+                       batch_axis=None,          # per-sample batched solve
+                       checkpoint_segments=None) # O(K)-state ACA memory
 
 ``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` sorted ascending,
 ``ys[k] = z(ts[k])`` with ``ys[0] = z0``.  Gradients flow to ``z0`` and
@@ -67,6 +68,7 @@ def odeint(
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
     batch_axis: Optional[int] = None,
+    checkpoint_segments: Optional[Union[int, str]] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """See module docstring for the solver × grad-method matrix.
 
@@ -108,6 +110,19 @@ def odeint(
     finish.  Composes with ``use_pallas`` (batched fused kernels with
     per-row error norms); fixed-grid solvers share one exact grid, so
     batching is lossless there.
+
+    ``checkpoint_segments=K`` (adaptive ACA only) bounds the trajectory-
+    checkpoint state memory: instead of every accepted state (O(N_f ·
+    dim)), the forward stores K coarse snapshots plus the full *scalar*
+    grid, and the ACA backward re-integrates each segment from its
+    snapshot with the saved stepsizes before replaying it in reverse —
+    memory O((K + N_f/K) · dim) at ~1 extra ψ per accepted step, with
+    gradients **bit-identical** to the full buffer (the replay re-takes
+    the exact saved steps; there is no re-search).  ``"auto"`` picks the
+    memory-optimal K = ⌈√max_steps⌉.  Composes with ``use_pallas`` and
+    ``batch_axis``; raises for other grad methods (they keep no state
+    checkpoints to bound) and for fixed-grid solvers.  See
+    ``docs/memory.md``.
     """
     tab = get_tableau(solver) if isinstance(solver, str) else solver
     ts = jnp.asarray(ts)
@@ -115,6 +130,13 @@ def odeint(
         raise ValueError("ts must be a 1D array of at least 2 times")
     if grad_method not in GRAD_METHODS:
         raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
+    if checkpoint_segments is not None and (
+            grad_method != "aca" or not tab.adaptive):
+        raise ValueError(
+            "checkpoint_segments requires grad_method='aca' with an "
+            f"adaptive solver (got {grad_method!r} / {tab.name!r}): only "
+            "the ACA trajectory checkpoint stores per-step states to "
+            "segment")
 
     cfg = ControllerConfig(max_steps=max_steps, max_trials=max_trials)
 
@@ -123,12 +145,14 @@ def odeint(
             f, z0, ts, args, tab=tab, grad_method=grad_method,
             batch_axis=batch_axis, rtol=rtol, atol=atol, cfg=cfg,
             steps_per_interval=steps_per_interval,
-            trial_budget=trial_budget, use_pallas=use_pallas)
+            trial_budget=trial_budget, use_pallas=use_pallas,
+            checkpoint_segments=checkpoint_segments)
 
     if tab.adaptive:
         if grad_method == "aca":
             return odeint_aca(f, z0, ts, args, solver=tab, rtol=rtol,
-                              atol=atol, cfg=cfg, use_pallas=use_pallas)
+                              atol=atol, cfg=cfg, use_pallas=use_pallas,
+                              checkpoint_segments=checkpoint_segments)
         if grad_method == "adjoint":
             return odeint_adjoint(f, z0, ts, args, solver=tab, rtol=rtol,
                                   atol=atol, cfg=cfg, use_pallas=use_pallas)
@@ -164,6 +188,7 @@ def _odeint_batched(
     steps_per_interval: int,
     trial_budget: Optional[int],
     use_pallas: bool,
+    checkpoint_segments: Optional[Union[int, str]] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """Batched dispatch behind ``odeint(..., batch_axis=a)``.
 
@@ -192,7 +217,8 @@ def _odeint_batched(
         if grad_method == "aca":
             ys, stats = odeint_aca_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, use_pallas=use_pallas)
+                cfg=cfg, use_pallas=use_pallas,
+                checkpoint_segments=checkpoint_segments)
         elif grad_method == "adjoint":
             ys, stats = odeint_adjoint_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,

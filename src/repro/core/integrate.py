@@ -11,7 +11,11 @@ Two engines over the same Runge-Kutta stepper:
   norm run as fused flat-state Pallas kernels over the raveled state (see
   ``stepper.py``); the loop logic is identical.  Accepted discretization
   points (t_i, h_i, z_i) are written into a fixed-capacity buffer: the
-  paper's trajectory checkpoint.
+  paper's trajectory checkpoint.  With ``checkpoint_segments=K`` the
+  state buffer shrinks to K coarse snapshots (one every
+  ``ceil(max_steps / K)`` accepted steps) while the scalar grid still
+  records every step — the memory-bounded mode the segmented ACA
+  backward sweep re-integrates from (``docs/memory.md``).
 
 * ``batched_adaptive_while_solve`` — the per-sample batched engine behind
   ``odeint(..., batch_axis=0)``.  One fused ``lax.while_loop`` advances
@@ -72,16 +76,112 @@ class Checkpoints(NamedTuple):
     start time and accepted stepsize; ``out_idx`` the index into ``ts`` that
     the interval's endpoint landed on (or -1).  Only slots [0, n) are valid.
 
+    With ``checkpoint_segments=K`` the scalar grids keep one slot per
+    accepted step (they are cheap) but ``z`` holds only K coarse
+    snapshots: slot s is the state at accepted step ``s * seg_len``,
+    ``seg_len = ceil(max_steps / K)``.  The ACA backward sweep then
+    re-integrates each segment from its snapshot with the *saved*
+    stepsizes before replaying it in reverse (see ``docs/memory.md``).
+
+    ``k0`` (segmented mode only) snapshots the first-stage derivative
+    carry alongside each state snapshot, so the segment re-integration
+    can chain FSAL first-stage reuse exactly as the forward loop did —
+    the replayed trajectory is the forward trajectory *bitwise*, not
+    just up to the FSAL algebraic identity.
+
     Batched solves reuse the same structure with a leading batch dim:
     ``t``/``h``/``out_idx`` become (B, max_steps), ``z`` leaves
-    (B, max_steps, ...) and ``n`` (B,) — each element records its *own*
-    accepted grid, which the ACA backward sweep replays per element.
+    (B, max_steps, ...) — or (B, K, ...) snapshots — and ``n`` (B,);
+    each element records its *own* accepted grid, which the ACA backward
+    sweep replays per element.
     """
     t: jnp.ndarray            # (max_steps,)
     h: jnp.ndarray            # (max_steps,)
-    z: PyTree                 # (max_steps, ...) per leaf
+    z: PyTree                 # (max_steps, ...) or (K, ...) per leaf
     out_idx: jnp.ndarray      # (max_steps,) int32
     n: jnp.ndarray            # number of valid slots
+    k0: Optional[PyTree] = None   # (K, ...) stage-0 derivative snapshots
+
+
+def resolve_checkpoint_segments(spec, max_steps: int) -> Optional[int]:
+    """Normalize a ``checkpoint_segments`` spec to an int K (or None).
+
+    ``None`` keeps the full O(max_steps) state buffer; ``"auto"`` picks
+    K = ceil(sqrt(max_steps)), the memory-optimal point of the
+    O(K + max_steps/K) segmented cost model; an int is clamped into
+    [1, max_steps].
+    """
+    if spec is None:
+        return None
+    if spec == "auto":
+        return max(1, int(-(-max_steps ** 0.5 // 1)))  # ceil(sqrt)
+    k = int(spec)
+    if k < 1:
+        raise ValueError(
+            f"checkpoint_segments must be >= 1 or 'auto'; got {spec}")
+    return min(k, max_steps)
+
+
+def segment_length(n_segments: int, max_steps: int) -> int:
+    """Steps per checkpoint segment: ceil(max_steps / K)."""
+    return -(-max_steps // n_segments)
+
+
+def resolve_segmentation(
+        spec, max_steps: int) -> Tuple[Optional[int], Optional[int]]:
+    """Resolve a ``checkpoint_segments`` spec to ``(n_seg, seg_len)``.
+
+    Returns ``(None, None)`` for the full buffer — including the
+    degenerate K >= max_steps case, where seg_len would be 1 and every
+    step is snapshotted anyway, so the classic sweep is strictly better
+    (no pointless per-step re-integration).
+    """
+    n_seg = resolve_checkpoint_segments(spec, max_steps)
+    if n_seg is None:
+        return None, None
+    seg_len = segment_length(n_seg, max_steps)
+    if seg_len == 1:
+        return None, None
+    return n_seg, seg_len
+
+
+def _snapshot_layout(n_seg: Optional[int],
+                     max_steps: int) -> Tuple[int, int]:
+    """State-buffer layout of an adaptive engine: (n_state_slots,
+    seg_len), where ``n_seg=None`` means the classic full buffer."""
+    if n_seg is None:
+        return max_steps, 1
+    return n_seg, segment_length(n_seg, max_steps)
+
+
+def _init_checkpoint_buffers(
+    z0: PyTree,
+    max_steps: int,
+    tdt,
+    n_state_slots: int,
+    batch_size: Optional[int] = None,
+):
+    """Zero-initialized Checkpoints buffers shared by the solo and
+    batched adaptive engines.
+
+    The scalar grids (t, h, out_idx) always get ``max_steps`` slots —
+    they cost O(N_f) scalars and the backward sweep needs every accepted
+    stepsize.  The state buffer gets ``n_state_slots`` slots per element:
+    ``max_steps`` for the classic full buffer, or K coarse snapshots
+    under ``checkpoint_segments=K``.  Returns (t, h, z, out_idx).
+    """
+    if batch_size is None:
+        shape = (max_steps,)
+        z = jax.tree.map(
+            lambda l: jnp.zeros((n_state_slots,) + l.shape, l.dtype), z0)
+    else:
+        shape = (batch_size, max_steps)
+        z = jax.tree.map(
+            lambda l: jnp.zeros((l.shape[0], n_state_slots) + l.shape[1:],
+                                l.dtype), z0)
+    t = jnp.zeros(shape, tdt)
+    oi = jnp.full(shape, -1, jnp.int32)
+    return t, jnp.zeros_like(t), z, oi
 
 
 def _empty_buffer(z0: PyTree, max_steps: int) -> PyTree:
@@ -108,6 +208,7 @@ def adaptive_while_solve(
     cfg: ControllerConfig,
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
+    checkpoint_segments: Optional[int] = None,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Integrate dz/dt = f(t, z, *args) through increasing times ``ts``.
 
@@ -120,12 +221,19 @@ def adaptive_while_solve(
     the trial step and its error norm then run as fused Pallas kernels
     and the while_loop carry/checkpoint buffers hold one flat array per
     slot.  Non-flat states silently use the pytree stepper.
+
+    ``checkpoint_segments=K`` (an already-resolved int — see
+    ``resolve_checkpoint_segments``) switches the state buffer to K
+    coarse snapshots written every ``segment_length(K, max_steps)``
+    accepted steps; the scalar grids still record every step so a
+    segmented ACA backward sweep can re-integrate losslessly.
     """
     n_eval = ts.shape[0]
     tdt = ts.dtype
     max_steps = cfg.max_steps
     # trial budget: every accepted step costs >= 1 trial
     max_total_trials = max_steps * cfg.max_trials
+    n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
 
     if h0 is None:
         h0 = initial_stepsize(f, ts[0], z0, args, tab.order, rtol, atol)
@@ -134,10 +242,8 @@ def adaptive_while_solve(
     ys = _empty_buffer(z0, n_eval)
     ys = _buffer_set(ys, 0, z0)
 
-    ckpt_t = jnp.zeros((max_steps,), tdt)
-    ckpt_h = jnp.zeros((max_steps,), tdt)
-    ckpt_z = _empty_buffer(z0, max_steps)
-    ckpt_oi = jnp.full((max_steps,), -1, jnp.int32)
+    ckpt_t, ckpt_h, ckpt_z, ckpt_oi = _init_checkpoint_buffers(
+        z0, max_steps, tdt, n_snap)
 
     k0 = f(ts[0], z0, *args)
     nfe0 = jnp.asarray(1 + 2, jnp.int32)  # hinit costs 2 evals when h0 is None
@@ -151,6 +257,10 @@ def adaptive_while_solve(
         nfe=nfe0,
         ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
     )
+    if checkpoint_segments is not None:
+        # segmented replay re-chains FSAL reuse, so the k0 carry is
+        # snapshotted next to the state at each segment boundary
+        carry0["ckpt_k0"] = _empty_buffer(k0, n_snap)
 
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
 
@@ -190,9 +300,23 @@ def adaptive_while_solve(
         i = c["i"]
         ckpt_t = c["ckpt_t"].at[i].set(jnp.where(accept, t, c["ckpt_t"][i]))
         ckpt_h = c["ckpt_h"].at[i].set(jnp.where(accept, h_use, c["ckpt_h"][i]))
-        ckpt_z = jax.tree.map(
-            lambda b, v: b.at[i].set(jnp.where(accept, v, b[i])),
-            c["ckpt_z"], z)
+        ckpt_k0 = None
+        if checkpoint_segments is None:
+            ckpt_z = jax.tree.map(
+                lambda b, v: b.at[i].set(jnp.where(accept, v, b[i])),
+                c["ckpt_z"], z)
+        else:
+            # segmented: snapshot (z, k0) only at segment boundaries
+            # (accepted step s * seg_len); c["k0"] is exactly the
+            # first-stage derivative this accepted trial consumed
+            s = jnp.minimum(i // seg_len, n_snap - 1)
+            snap = accept & (i % seg_len == 0)
+            ckpt_z = jax.tree.map(
+                lambda b, v: b.at[s].set(jnp.where(snap, v, b[s])),
+                c["ckpt_z"], z)
+            ckpt_k0 = jax.tree.map(
+                lambda b, v: b.at[s].set(jnp.where(snap, v, b[s])),
+                c["ckpt_k0"], c["k0"])
         oi_val = jnp.where(hit, c["eval_idx"], jnp.asarray(-1, jnp.int32))
         ckpt_oi = c["ckpt_oi"].at[i].set(
             jnp.where(accept, oi_val, c["ckpt_oi"][i]))
@@ -222,7 +346,7 @@ def adaptive_while_solve(
         k0_new = _where_tree(accept, k0_acc, c["k0"])
         nfe = jnp.where(accept, nfe_acc, nfe)
 
-        return dict(
+        out = dict(
             t=jnp.where(accept, t_new, t),
             z=_where_tree(accept, res.z_next, z),
             k0=k0_new,
@@ -236,12 +360,16 @@ def adaptive_while_solve(
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
             ckpt_oi=ckpt_oi,
         )
+        if ckpt_k0 is not None:
+            out["ckpt_k0"] = ckpt_k0
+        return out
 
     c = jax.lax.while_loop(cond, body, carry0)
 
     overflow = c["eval_idx"] < n_eval
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
-                        out_idx=c["ckpt_oi"], n=c["i"])
+                        out_idx=c["ckpt_oi"], n=c["i"],
+                        k0=c.get("ckpt_k0"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
                        overflow=overflow)
     return c["ys"], ckpts, stats
@@ -267,6 +395,7 @@ def batched_adaptive_while_solve(
     cfg: ControllerConfig,
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
+    checkpoint_segments: Optional[int] = None,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Per-sample batched adaptive solve: one fused while_loop, one
     stepsize controller *per batch element*.
@@ -286,7 +415,9 @@ def batched_adaptive_while_solve(
     last ``ts[k]`` (or exhausted their step/trial budget).  ``use_pallas``
     expects an already-flat (B, N) state (``stepper.maybe_flatten_batched``)
     and runs every trial through the batched fused kernels with per-row
-    error norms.
+    error norms.  ``checkpoint_segments`` as in ``adaptive_while_solve``:
+    each element writes its own K snapshot rows at its own segment
+    boundaries.
     """
     if not tab.adaptive:
         raise ValueError("batched_adaptive_while_solve requires an "
@@ -297,6 +428,7 @@ def batched_adaptive_while_solve(
     tdt = ts.dtype
     max_steps = cfg.max_steps
     max_total_trials = max_steps * cfg.max_trials
+    n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
     targs = args
 
     if h0 is None:
@@ -306,12 +438,8 @@ def batched_adaptive_while_solve(
 
     ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
 
-    ckpt_t = jnp.zeros((B, max_steps), tdt)
-    ckpt_h = jnp.zeros((B, max_steps), tdt)
-    ckpt_z = jax.tree.map(
-        lambda l: jnp.zeros((l.shape[0], max_steps) + l.shape[1:],
-                            l.dtype), z0)
-    ckpt_oi = jnp.full((B, max_steps), -1, jnp.int32)
+    ckpt_t, ckpt_h, ckpt_z, ckpt_oi = _init_checkpoint_buffers(
+        z0, max_steps, tdt, n_snap, batch_size=B)
 
     fb0 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))
     k0 = fb0(jnp.full((B,), ts[0], tdt), z0)
@@ -326,6 +454,12 @@ def batched_adaptive_while_solve(
         nfe=nfe0,
         ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
     )
+    if checkpoint_segments is not None:
+        # segmented replay re-chains FSAL reuse per element: snapshot
+        # each element's k0 carry next to its state snapshots
+        carry0["ckpt_k0"] = jax.tree.map(
+            lambda l: jnp.zeros((l.shape[0], n_snap) + l.shape[1:],
+                                l.dtype), k0)
 
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
 
@@ -363,10 +497,26 @@ def batched_adaptive_while_solve(
             jnp.where(accept, t, c["ckpt_t"][rows, i_c]))
         ckpt_h = c["ckpt_h"].at[rows, i_c].set(
             jnp.where(accept, h_use, c["ckpt_h"][rows, i_c]))
-        ckpt_z = jax.tree.map(
-            lambda b, v: b.at[rows, i_c].set(_bwhere(accept, v,
-                                                     b[rows, i_c])),
-            c["ckpt_z"], z)
+        ckpt_k0 = None
+        if checkpoint_segments is None:
+            ckpt_z = jax.tree.map(
+                lambda b, v: b.at[rows, i_c].set(_bwhere(accept, v,
+                                                         b[rows, i_c])),
+                c["ckpt_z"], z)
+        else:
+            # segmented: each element snapshots (z, k0) at ITS OWN
+            # boundaries; c["k0"] rows are exactly the first-stage
+            # derivatives this accepted trial consumed
+            s = jnp.minimum(i_c // seg_len, n_snap - 1)       # (B,)
+            snap = accept & (i_c % seg_len == 0)
+            ckpt_z = jax.tree.map(
+                lambda b, v: b.at[rows, s].set(_bwhere(snap, v,
+                                                       b[rows, s])),
+                c["ckpt_z"], z)
+            ckpt_k0 = jax.tree.map(
+                lambda b, v: b.at[rows, s].set(_bwhere(snap, v,
+                                                       b[rows, s])),
+                c["ckpt_k0"], c["k0"])
         oi_val = jnp.where(hit, c["eval_idx"], jnp.full((B,), -1,
                                                         jnp.int32))
         ckpt_oi = c["ckpt_oi"].at[rows, i_c].set(
@@ -397,7 +547,7 @@ def batched_adaptive_while_solve(
         nfe = c["nfe"] + jnp.where(live, tab.stages - 1, 0) \
             + jnp.where(accept, nfe_acc, 0)
 
-        return dict(
+        out = dict(
             t=jnp.where(accept, t_new, t),
             z=_bwhere_tree(accept, res.z_next, z),
             k0=k0_new,
@@ -411,12 +561,16 @@ def batched_adaptive_while_solve(
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
             ckpt_oi=ckpt_oi,
         )
+        if ckpt_k0 is not None:
+            out["ckpt_k0"] = ckpt_k0
+        return out
 
     c = jax.lax.while_loop(cond, body, carry0)
 
     overflow = c["eval_idx"] < n_eval
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
-                        out_idx=c["ckpt_oi"], n=c["i"])
+                        out_idx=c["ckpt_oi"], n=c["i"],
+                        k0=c.get("ckpt_k0"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
                        overflow=overflow)
     return c["ys"], ckpts, stats

@@ -39,7 +39,8 @@ class NodeConfig:
     rtol=atol=1e-2).  ``regime`` picks dynamic adaptive stepping vs the
     static fixed grid used at pod scale; ``use_pallas`` enables the
     fused flat-state solver kernels; ``batch_axis`` turns on per-sample
-    batched solving (see ``odeint``).
+    batched solving; ``checkpoint_segments`` bounds the ACA trajectory-
+    checkpoint memory to K state snapshots per solve (see ``odeint``).
     """
     enabled: bool = False
     solver: str = "heun_euler"      # the paper trains with HeunEuler
@@ -55,6 +56,11 @@ class NodeConfig:
     # lockstep).  With a batch axis every sample in the block's input
     # integrates on its own adaptive grid — see odeint(batch_axis=...).
     batch_axis: Optional[int] = None
+    # segmented O(K)-state ACA checkpointing (adaptive regime, ACA
+    # only): int K, "auto" (= ceil(sqrt(max_steps))) or None for the
+    # classic full buffer.  Gradients are bit-identical either way —
+    # this is purely a memory/recompute trade — see odeint()
+    checkpoint_segments: Optional[Any] = None
 
 
 def node_block_apply(
@@ -79,6 +85,9 @@ def node_block_apply(
             steps_per_interval=cfg.steps_per_interval,
             use_pallas=cfg.use_pallas,
             batch_axis=cfg.batch_axis,
+            # threaded so a segmented config on the fixed regime raises
+            # the api's informative error instead of silently ignoring
+            checkpoint_segments=cfg.checkpoint_segments,
         )
     else:
         zT, _ = odeint_final(
@@ -89,6 +98,7 @@ def node_block_apply(
             max_steps=cfg.max_steps,
             use_pallas=cfg.use_pallas,
             batch_axis=cfg.batch_axis,
+            checkpoint_segments=cfg.checkpoint_segments,
         )
     return zT
 

@@ -23,6 +23,14 @@ Because the reverse sweep replays the *forward* trajectory exactly, the
 gradient equals the true gradient of the numerical solution
 (discretize-then-optimize) — no reverse-time re-integration error
 (Theorem 3.2's e_k pathology does not arise).
+
+Memory-bounded mode (``checkpoint_segments=K``): the forward keeps only
+K coarse state snapshots (the scalar grid still covers every step) and
+the backward re-integrates each segment from its snapshot with the
+*saved* stepsizes before replaying it in reverse — state memory drops
+from O(N_f) to O(K + N_f/K) at ~1 extra ψ per step, with gradients
+bit-identical to the full buffer (no re-search, so the replayed
+trajectory is the forward trajectory).  See ``docs/memory.md``.
 """
 
 from __future__ import annotations
@@ -38,9 +46,11 @@ from .controller import ControllerConfig
 from .integrate import (
     Checkpoints,
     SolveStats,
+    _bwhere,
     adaptive_while_solve,
     batched_adaptive_while_solve,
     make_fixed_grid,
+    resolve_segmentation,
 )
 from .stepper import (
     maybe_flatten,
@@ -112,6 +122,106 @@ def _buffer_slot(buf: PyTree, i) -> PyTree:
     return jax.tree.map(lambda b: b[i], buf)
 
 
+def _aca_backward_sweep_segmented(
+    tab: Tableau,
+    f: Callable,
+    ckpts: Checkpoints,
+    args: PyTree,
+    g_ys: PyTree,
+    n_steps,
+    seg_len: int,
+    use_pallas: bool = False,
+):
+    """Segmented (O(K)-state) reverse sweep: ``checkpoint_segments=K``.
+
+    ``ckpts.z`` holds only K coarse snapshots (slot s = state at
+    accepted step ``s * seg_len``, with the matching first-stage
+    derivative carry in ``ckpts.k0``); the scalar grids ``t``/``h``/
+    ``out_idx`` still cover every accepted step.  Walking segments last
+    to first, each segment is first re-integrated forward from its
+    snapshot with the *saved* stepsizes and re-chained FSAL first-stage
+    reuse (no stepsize search, same k0 carry — replayed ψ steps are
+    bit-identical to the forward solve, so the discretize-then-optimize
+    gradient is bit-identical to the full-buffer sweep), filling a
+    ``seg_len``-slot local state buffer; then its local ψ steps are
+    replayed in reverse exactly as in ``_aca_backward_sweep``.  Peak
+    state memory is O(K + seg_len) = O(K + N_f/K) instead of O(N_f),
+    for one extra ψ per accepted step.
+
+    Returns (dL/dz0, dL/dargs).
+    """
+
+    def local_step(t_i, h_i, z_i, a):
+        # one ψ with the SAVED stepsize; k0 recomputed so its gradient flows
+        return rk_step(tab, f, t_i, z_i, h_i, _as_tuple(a),
+                       use_pallas=use_pallas).z_next
+
+    lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))
+    gargs0 = jax.tree.map(jnp.zeros_like, args)
+    # the O(seg_len) replay buffer — the N_f/K term of the cost model
+    zbuf0 = jax.tree.map(
+        lambda b: jnp.zeros((seg_len,) + b.shape[1:], b.dtype), ckpts.z)
+    n_segments = (n_steps + seg_len - 1) // seg_len
+    targs = _as_tuple(args)
+
+    def seg_body(jseg, carry):
+        lam, gargs = carry
+        s = n_segments - 1 - jseg
+        i0 = s * seg_len
+        i1 = jnp.minimum(i0 + seg_len, n_steps)
+        cnt = i1 - i0
+
+        # --- forward re-integration of segment s from its snapshot ----
+        # the k0 carry chains exactly as in adaptive_while_solve (FSAL
+        # reuse / post-accept recompute), so every replayed state is the
+        # forward state bitwise
+        z_start = _buffer_slot(ckpts.z, s)
+        k0_start = _buffer_slot(ckpts.k0, s)
+
+        def fwd_body(q, zc):
+            z, k0, zbuf = zc
+            i = i0 + q
+            t_i, h_i = ckpts.t[i], ckpts.h[i]
+            zbuf = jax.tree.map(lambda b, v: b.at[q].set(v), zbuf, z)
+            res = rk_step(tab, f, t_i, z, h_i, targs, k0=k0,
+                          use_pallas=use_pallas)
+            if tab.fsal:
+                k0_new = res.k_last
+            else:
+                k0_new = f(t_i + h_i, res.z_next, *targs)
+            return (res.z_next, k0_new, zbuf)
+
+        _, _, zbuf = jax.lax.fori_loop(
+            0, cnt, fwd_body, (z_start, k0_start, zbuf0))
+
+        # --- reverse replay of the segment's local ψ steps ------------
+        def rev_body(r, carry):
+            lam, gargs = carry
+            i = i1 - 1 - r
+            t_i = ckpts.t[i]
+            h_i = ckpts.h[i]
+            z_i = _buffer_slot(zbuf, i - i0)
+            oi = ckpts.out_idx[i]
+
+            def add_out(lam):
+                g_k = jax.tree.map(lambda g: g[oi], g_ys)
+                return jax.tree.map(jnp.add, lam, g_k)
+
+            lam = jax.lax.cond(oi >= 0, add_out, lambda l: l, lam)
+            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
+                                z_i, args)
+            dlam, dargs = vjp_fn(lam)
+            gargs = jax.tree.map(jnp.add, gargs, dargs)
+            return (dlam, gargs)
+
+        return jax.lax.fori_loop(0, cnt, rev_body, (lam, gargs))
+
+    lam, gargs = jax.lax.fori_loop(0, n_segments, seg_body, (lam0, gargs0))
+    # cotangent of ys[0] = z0 (identity path)
+    lam = jax.tree.map(lambda l, g: l + g[0], lam, g_ys)
+    return lam, gargs
+
+
 def _aca_backward_sweep_batched(
     tab: Tableau,
     f: Callable,
@@ -180,6 +290,132 @@ def _aca_backward_sweep_batched(
     return lam, gargs
 
 
+def _aca_backward_sweep_segmented_batched(
+    tab: Tableau,
+    f: Callable,
+    ckpts: Checkpoints,
+    args: PyTree,
+    g_ys: PyTree,
+    n_steps,
+    seg_len: int,
+    use_pallas: bool = False,
+):
+    """Batched segmented reverse sweep (``checkpoint_segments`` +
+    ``batch_axis``).
+
+    Elements record different step counts n_b, so their segment
+    boundaries don't align.  To keep the gradient *bit-identical* to the
+    full-buffer batched sweep, the replay windows are **end-aligned per
+    element**: at global reverse iteration J = j·seg_len + r, element b
+    replays its step n_b − 1 − J — exactly the pairing (and therefore
+    the cross-batch dargs summation order) of
+    ``_aca_backward_sweep_batched``.  Every ``seg_len`` iterations each
+    element refills its local state buffer by re-integrating from the
+    nearest *start-aligned* snapshot at or before its window (≤ 2·seg_len
+    saved-stepsize ψ steps, since a window can straddle one snapshot
+    stride), with finished elements frozen at h = 0 as usual.  Peak
+    state memory O(B · (K + seg_len)); the re-integration costs at most
+    2 ψ per accepted step.
+
+    Returns (dL/dz0 (B, ...), dL/dargs summed over the batch).
+    """
+    B = n_steps.shape[0]
+    rows = jnp.arange(B)
+    S = ckpts.t.shape[1]
+    n_snap = jax.tree.leaves(ckpts.z)[0].shape[1]
+    hdt = ckpts.h.dtype
+
+    def local_step(t_i, h_i, z_i, a):
+        # one batched ψ with each element's SAVED stepsize (no search);
+        # k0 recomputed so its gradient flows
+        return rk_step_batched(tab, f, t_i, z_i, h_i, _as_tuple(a),
+                               use_pallas=use_pallas).z_next
+
+    lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))  # (B, ...)
+    gargs0 = jax.tree.map(jnp.zeros_like, args)
+    zbuf0 = jax.tree.map(
+        lambda b: jnp.zeros((B, seg_len) + b.shape[2:], b.dtype), ckpts.z)
+    n_max = jnp.max(n_steps)
+    n_outer = (n_max + seg_len - 1) // seg_len
+    targs = _as_tuple(args)
+
+    def outer(j, carry):
+        lam, gargs = carry
+        g_hi = n_steps - j * seg_len             # (B,) window end (excl.)
+        g_lo = jnp.maximum(g_hi - seg_len, 0)    # (B,) window start
+
+        # --- refill: re-integrate [snapshot .. g_hi) per element ------
+        # the k0 carry chains exactly as in batched_adaptive_while_solve
+        # (FSAL reuse / post-accept recompute), so every replayed state
+        # is that element's forward state bitwise
+        s = jnp.clip(g_lo // seg_len, 0, n_snap - 1)
+        a0 = s * seg_len                         # snapshot's global step
+        z = jax.tree.map(lambda b: b[rows, s], ckpts.z)
+        k0 = jax.tree.map(lambda b: b[rows, s], ckpts.k0)
+
+        def fwd_body(q, zc):
+            z, k0, zbuf = zc
+            i = a0 + q                           # (B,)
+            live = i < g_hi                      # done rows: g_hi <= 0
+            i_c = jnp.minimum(i, S - 1)
+            t_i = ckpts.t[rows, i_c]
+            h_i = jnp.where(live, ckpts.h[rows, i_c], jnp.zeros((), hdt))
+            in_win = live & (i >= g_lo)
+            slot = jnp.clip(i - g_lo, 0, seg_len - 1)
+            zbuf = jax.tree.map(
+                lambda b, v: b.at[rows, slot].set(
+                    _bwhere(in_win, v, b[rows, slot])), zbuf, z)
+            # h = 0 makes ψ the exact identity for rows outside their
+            # window, so the carry stays bit-stable without extra masking
+            res = rk_step_batched(tab, f, t_i, z, h_i, targs, k0=k0,
+                                  use_pallas=use_pallas)
+            if tab.fsal:
+                k0_new = res.k_last
+            else:
+                k0_new = jax.vmap(
+                    lambda ti, zi: f(ti, zi, *targs))(t_i + h_i,
+                                                      res.z_next)
+            return (res.z_next, k0_new, zbuf)
+
+        _, _, zbuf = jax.lax.fori_loop(0, 2 * seg_len, fwd_body,
+                                       (z, k0, zbuf0))
+
+        # --- reverse replay, global iteration J = j*seg_len + r -------
+        def rev_body(r, carry):
+            lam, gargs = carry
+            i = n_steps - 1 - (j * seg_len + r)  # (B,), < 0 when done
+            live = i >= 0
+            i_c = jnp.maximum(i, 0)
+            t_i = ckpts.t[rows, i_c]
+            h_i = jnp.where(live, ckpts.h[rows, i_c], jnp.zeros((), hdt))
+            slot = jnp.clip(i - g_lo, 0, seg_len - 1)
+            z_i = jax.tree.map(lambda b: b[rows, slot], zbuf)
+            oi = jnp.where(live, ckpts.out_idx[rows, i_c], -1)
+
+            oi_c = jnp.maximum(oi, 0)
+            lam = jax.tree.map(
+                lambda l, g: l + jnp.where(
+                    (oi >= 0).reshape((-1,) + (1,) * (l.ndim - 1)),
+                    g[oi_c, rows], jnp.zeros_like(l)),
+                lam, g_ys)
+
+            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
+                                z_i, args)
+            dlam, dargs = vjp_fn(lam)
+            # all-frozen trailing iterations leave gargs bit-untouched
+            any_live = jnp.any(live)
+            gargs = jax.tree.map(
+                lambda g, d: jnp.where(any_live, g + d, g), gargs, dargs)
+            return (dlam, gargs)
+
+        return jax.lax.fori_loop(0, seg_len, rev_body, (lam, gargs))
+
+    lam, gargs = jax.lax.fori_loop(0, n_outer, outer, (lam0, gargs0))
+    # cotangent of ys[0] = z0 (identity path)
+    lam = jax.tree.map(lambda l, g: l + g[0], lam, g_ys)
+    return lam, gargs
+
+
 def odeint_aca_batched(
     f: Callable,
     z0: PyTree,
@@ -191,6 +427,7 @@ def odeint_aca_batched(
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
     use_pallas: bool = False,
+    checkpoint_segments=None,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched ACA: ``odeint(..., batch_axis=0)``'s adaptive
     ACA path.
@@ -203,6 +440,11 @@ def odeint_aca_batched(
     preserved exactly — gradients match ``jax.vmap`` of the unbatched
     solver.  Returns (ys, stats) with ys leaves (len(ts), B, ...) and
     per-element stats.
+
+    ``checkpoint_segments`` (int, ``"auto"`` or None) bounds per-element
+    state memory to K snapshots + one seg_len replay buffer; the
+    end-aligned segmented sweep keeps gradients bit-identical to the
+    full buffer (see ``_aca_backward_sweep_segmented_batched``).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -210,6 +452,8 @@ def odeint_aca_batched(
         raise ValueError(
             "odeint_aca_batched requires an embedded adaptive tableau; "
             "fixed-grid solvers batch losslessly through odeint_aca_fixed")
+    n_seg, seg_len = resolve_segmentation(checkpoint_segments,
+                                          cfg.max_steps)
 
     f, z0, unravel, use_pallas = maybe_flatten_batched(f, z0, use_pallas)
 
@@ -217,20 +461,26 @@ def odeint_aca_batched(
     def solve(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, checkpoint_segments=n_seg)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, checkpoint_segments=n_seg)
         return (ys, stats), (ckpts, args, ts)
 
     def solve_bwd(res, cot):
         ckpts, args, ts = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
-        dz0, dargs = _aca_backward_sweep_batched(
-            solver, f, ckpts, args, g_ys, ckpts.n, use_pallas=use_pallas)
+        if n_seg is None:
+            dz0, dargs = _aca_backward_sweep_batched(
+                solver, f, ckpts, args, g_ys, ckpts.n,
+                use_pallas=use_pallas)
+        else:
+            dz0, dargs = _aca_backward_sweep_segmented_batched(
+                solver, f, ckpts, args, g_ys, ckpts.n, seg_len,
+                use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)
@@ -252,6 +502,7 @@ def odeint_aca(
     cfg: Optional[ControllerConfig] = None,
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
+    checkpoint_segments=None,
 ) -> Tuple[PyTree, SolveStats]:
     """Solve dz/dt = f(t, z, *args) with ACA gradients.
 
@@ -263,6 +514,13 @@ def odeint_aca(
     loop, the checkpoint buffer and the backward replay on the fused
     flat-state kernel path; the ravel/unravel sit *outside* the
     custom_vjp so cotangents flow through them as plain jnp reshapes.
+
+    ``checkpoint_segments`` (int K, ``"auto"`` or None) bounds the state
+    checkpoint memory: the forward stores K snapshots instead of every
+    accepted state and the backward re-integrates each segment from its
+    snapshot with the saved stepsizes before replaying it — gradients
+    are bit-identical to the full buffer at ~1 extra ψ per step (see
+    ``docs/memory.md``).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -271,6 +529,8 @@ def odeint_aca(
         raise ValueError(
             "odeint_aca requires an embedded adaptive tableau; use "
             "odeint_aca_fixed for fixed-grid solvers")
+    n_seg, seg_len = resolve_segmentation(checkpoint_segments,
+                                          cfg.max_steps)
 
     f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
 
@@ -281,20 +541,26 @@ def odeint_aca(
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, checkpoint_segments=n_seg)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, checkpoint_segments=n_seg)
         return (ys, stats), (ckpts, args, ts)
 
     def solve_bwd(res, cot):
         ckpts, args, ts = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
-        dz0, dargs = _aca_backward_sweep(
-            solver, f, ckpts, args, g_ys, ckpts.n, use_pallas=use_pallas)
+        if n_seg is None:
+            dz0, dargs = _aca_backward_sweep(
+                solver, f, ckpts, args, g_ys, ckpts.n,
+                use_pallas=use_pallas)
+        else:
+            dz0, dargs = _aca_backward_sweep_segmented(
+                solver, f, ckpts, args, g_ys, ckpts.n, seg_len,
+                use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)

@@ -1,0 +1,235 @@
+"""Segmented (O(K)-state) ACA checkpointing — gradient parity.
+
+``checkpoint_segments=K`` must not change gradients: the backward sweep
+re-integrates each segment from its snapshot with the *saved* stepsizes
+and a re-chained FSAL k0 carry, so every replayed ψ is the forward ψ.
+We assert **exact** float equality in the configurations where the
+compiled replay is bit-stable — the solo engine on both stepper paths
+and the batched engine on the fused-kernel path (Pallas calls compile
+identically in any loop context) — and ulp-level agreement on the
+batched *pytree* path, where XLA CPU fuses the per-row vector-field
+arithmetic differently between the forward while_loop and the replay
+fori_loop.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import odeint
+from repro.core.controller import ControllerConfig
+from repro.core.integrate import (
+    adaptive_while_solve,
+    batched_adaptive_while_solve,
+    resolve_checkpoint_segments,
+    resolve_segmentation,
+    segment_length,
+)
+from repro.core.tableaus import get_tableau
+from repro.kernels import ops
+
+MAX_STEPS = 48
+TS = (0.0, 0.6, 1.3)
+# per-solver tolerances calibrated so every grid has enough accepted
+# steps to segment without overflowing the checkpoint capacity
+SOLO_TOL = {"dopri5": 1e-7, "bosh3": 1e-6, "heun_euler": 1e-4}
+BATCHED_CFG = {"dopri5": (1e-4, 64), "heun_euler": (1e-3, 96)}
+
+
+@pytest.fixture(autouse=True)
+def _interpret_kernels():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _assert_trees_bitequal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------- solo --
+
+def _f_solo(t, z, w):
+    return {"x": jnp.tanh(w @ z["x"]) - 0.3 * z["x"],
+            "y": -0.5 * z["y"] + 0.1 * jnp.sin(z["y"]) * z["x"][:2][None]}
+
+
+def _solo_problem():
+    w = jax.random.normal(jax.random.PRNGKey(0), (5, 5)) * 0.5
+    z0 = {"x": jax.random.normal(jax.random.PRNGKey(1), (5,)),
+          "y": jax.random.normal(jax.random.PRNGKey(2), (3, 2))}
+    return z0, w
+
+
+@functools.lru_cache(maxsize=None)
+def _solo_grads(solver, use_pallas, segments, max_steps=MAX_STEPS):
+    z0, w = _solo_problem()
+    tol = SOLO_TOL[solver]
+
+    def loss(z0, w):
+        ys, stats = odeint(_f_solo, z0, jnp.asarray(TS), (w,),
+                           solver=solver, rtol=tol, atol=tol,
+                           max_steps=max_steps, use_pallas=use_pallas,
+                           checkpoint_segments=segments)
+        return ((ys["x"][-1] ** 2).sum() + (ys["y"][1] ** 3).sum(),
+                stats)
+    (_, stats), g = jax.value_and_grad(
+        loss, argnums=(0, 1), has_aux=True)(z0, w)
+    return g, stats
+
+
+@pytest.mark.parametrize("solver", ["dopri5", "heun_euler"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("segments", [1, 3, "auto"])
+def test_solo_grads_bitmatch_full_buffer(solver, use_pallas, segments):
+    g_full, stats = _solo_grads(solver, use_pallas, None)
+    g_seg, stats_seg = _solo_grads(solver, use_pallas, segments)
+    assert int(stats.n_steps) > 4  # the grid is long enough to segment
+    assert int(stats_seg.n_steps) == int(stats.n_steps)
+    _assert_trees_bitequal(g_seg, g_full,
+                           f"{solver}/pallas={use_pallas}/K={segments}")
+
+
+def test_solo_bosh3_auto_bitmatch():
+    _assert_trees_bitequal(_solo_grads("bosh3", False, "auto")[0],
+                           _solo_grads("bosh3", False, None)[0])
+
+
+def test_K_at_least_max_steps_is_the_full_buffer():
+    # seg_len == 1 delegates to the classic sweep: exactly equal, and
+    # oversized K clamps to max_steps first
+    for K in (MAX_STEPS, 10_000):
+        _assert_trees_bitequal(_solo_grads("dopri5", False, K)[0],
+                               _solo_grads("dopri5", False, None)[0])
+
+
+# ------------------------------------------------------------- batched --
+
+def _f_batched(t, z, w):
+    x, logk = z[:-1], z[-1]
+    dx = -jnp.exp(logk) * x + 0.1 * jnp.tanh(w @ x)
+    return jnp.concatenate([dx, jnp.zeros((1,), z.dtype)])
+
+
+def _batched_problem(B=4, d=8):
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (B, d - 1))
+    logk = jnp.linspace(0.0, 2.5, B)  # stiffness spread -> ragged grids
+    z0 = jnp.concatenate([x0, logk[:, None]], axis=1).astype(jnp.float32)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (d - 1, d - 1))
+         * 0.3).astype(jnp.float32)
+    return z0, w
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_grads(solver, use_pallas, segments):
+    z0, w = _batched_problem()
+    tol, max_steps = BATCHED_CFG[solver]
+
+    def loss(z0, w):
+        ys, stats = odeint(_f_batched, z0, jnp.asarray(TS, jnp.float32),
+                           (w,), solver=solver, batch_axis=0, rtol=tol,
+                           atol=tol, max_steps=max_steps,
+                           use_pallas=use_pallas,
+                           checkpoint_segments=segments)
+        return (ys[-1] ** 2).sum() + (ys[1] ** 3).sum(), stats
+    (_, stats), g = jax.value_and_grad(
+        loss, argnums=(0, 1), has_aux=True)(z0, w)
+    return g, stats
+
+
+@pytest.mark.parametrize("solver", ["dopri5", "heun_euler"])
+@pytest.mark.parametrize("segments", [1, 3, "auto"])
+def test_batched_pallas_grads_bitmatch(solver, segments):
+    g_full, stats = _batched_grads(solver, True, None)
+    g_seg, _ = _batched_grads(solver, True, segments)
+    # the stiffness spread must actually produce ragged per-element
+    # grids, otherwise the end-aligned replay is not exercised
+    assert len(set(np.asarray(stats.n_steps).tolist())) > 1
+    _assert_trees_bitequal(g_seg, g_full, f"{solver}/K={segments}")
+
+
+@pytest.mark.parametrize("segments", [1, 3, "auto"])
+def test_batched_pytree_grads_near_exact(segments):
+    (dz0_f, dw_f), _ = _batched_grads("dopri5", False, None)
+    (dz0_s, dw_s), _ = _batched_grads("dopri5", False, segments)
+    # the replayed states pick up ~1 ulp from XLA CPU fusing the per-row
+    # field arithmetic differently inside the fori_loop than inside the
+    # forward while_loop (see module docstring) — agreement is at fp
+    # noise level, far below the adjoint method's systematic error
+    np.testing.assert_allclose(np.asarray(dz0_s), np.asarray(dz0_f),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(dw_s), np.asarray(dw_f),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_batched_heun_euler_pytree_bitmatch():
+    # the non-FSAL 2-stage tableau compiles bit-stably even on the
+    # batched pytree path — full exactness holds there
+    g_full, _ = _batched_grads("heun_euler", False, None)
+    g_seg, _ = _batched_grads("heun_euler", False, "auto")
+    _assert_trees_bitequal(g_seg, g_full)
+
+
+# ------------------------------------------------- overflow / raggedness --
+
+def test_overflow_still_bitmatches_full_buffer():
+    """A segment can never exceed its replay budget (seg_len is derived
+    from max_steps), so the overflow mode is the *solve* running out of
+    accepted steps: both buffers then hold the same truncated grid and
+    gradients must still agree exactly."""
+    g_full, stats_full = _solo_grads("dopri5", False, None, max_steps=3)
+    g_seg, stats_seg = _solo_grads("dopri5", False, 2, max_steps=3)
+    assert bool(stats_full.overflow) and bool(stats_seg.overflow)
+    _assert_trees_bitequal(g_seg, g_full)
+
+
+# ------------------------------------------------------- plumbing/shapes --
+
+def test_snapshot_buffer_shapes():
+    tab = get_tableau("dopri5")
+    cfg = ControllerConfig(max_steps=32, max_trials=12)
+    z0, w = _solo_problem()
+    _, ck, _ = jax.jit(lambda z0, w: adaptive_while_solve(
+        tab, _f_solo, z0, jnp.asarray(TS), (w,), 1e-4, 1e-4, cfg,
+        checkpoint_segments=4))(z0, w)
+    assert ck.z["x"].shape == (4, 5) and ck.z["y"].shape == (4, 3, 2)
+    assert ck.k0["x"].shape == (4, 5)
+    assert ck.t.shape == (32,)  # scalar grids keep every step
+
+    z0b, wb = _batched_problem()
+    _, ckb, _ = jax.jit(lambda z0, w: batched_adaptive_while_solve(
+        tab, _f_batched, z0, jnp.asarray(TS, jnp.float32), (w,), 1e-4,
+        1e-4, cfg, checkpoint_segments=4))(z0b, wb)
+    assert ckb.z.shape == (4, 4, 8) and ckb.k0.shape == (4, 4, 8)
+    assert ckb.t.shape == (4, 32)
+
+
+def test_resolve_checkpoint_segments():
+    assert resolve_checkpoint_segments(None, 64) is None
+    assert resolve_checkpoint_segments("auto", 64) == 8
+    assert resolve_checkpoint_segments("auto", 50) == 8  # ceil(sqrt)
+    assert resolve_checkpoint_segments(200, 64) == 64    # clamped
+    with pytest.raises(ValueError):
+        resolve_checkpoint_segments(0, 64)
+    # K segments of seg_len steps always cover the whole grid
+    for max_steps in (7, 32, 50, 64):
+        for K in (1, 2, 3, 5, max_steps):
+            assert K * segment_length(K, max_steps) >= max_steps
+    # degenerate seg_len == 1 resolves to the full buffer
+    assert resolve_segmentation(None, 64) == (None, None)
+    assert resolve_segmentation(64, 64) == (None, None)
+    assert resolve_segmentation(8, 64) == (8, 8)
+
+
+def test_rejected_for_non_aca_and_fixed_solvers():
+    z0, w = _solo_problem()
+    for kw in (dict(grad_method="adjoint"), dict(grad_method="naive"),
+               dict(solver="rk4")):
+        with pytest.raises(ValueError, match="checkpoint_segments"):
+            odeint(_f_solo, z0, jnp.asarray(TS), (w,),
+                   checkpoint_segments=4, **kw)
