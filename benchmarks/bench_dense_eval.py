@@ -1,0 +1,114 @@
+"""Dense eval grids: ``interpolate_ts`` natural-grid solving vs forced
+step landings — the tentpole claim of the dense-output subsystem.
+
+A 64-point eval grid on the stiff van der Pol problem (μ = 4, the
+paper's reverse-error testbed) forces the classic engine to land on
+every eval time: the controller's natural steps get chopped to ~1/64 of
+the horizon regardless of what the error control wants, inflating the ψ
+trial count.  With ``interpolate_ts=True`` the controller advances on
+its natural grid and eval times are read off each accepted step's
+4th-order interpolant.
+
+Acceptance gates (asserted):
+  * ≥1.5× fewer ψ trials at 64 eval points;
+  * ≤2e-4 max interpolation error against a 10³×-tighter reference.
+
+Headline numbers land in the shared JSON schema (``common.emit_json``),
+so CI's ``BENCH_dense_eval.json`` artifact records both.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import odeint
+from .common import emit, emit_json
+
+MU = 4.0
+T1 = 3.0
+N_EVAL = 64
+TOL = 1e-5
+
+
+def _vdp(t, z, mu):
+    return jnp.stack([z[1], mu * (1 - z[0] ** 2) * z[1] - z[0]])
+
+
+def run(quick: bool = False):
+    z0 = jnp.array([2.0, 0.0])
+    mu = jnp.float32(MU)
+    ts = jnp.linspace(0.0, T1, N_EVAL)
+    kw = dict(solver="dopri5", grad_method="aca", rtol=TOL, atol=TOL,
+              max_steps=4096, max_trials=20)
+
+    ys_land, st_land = odeint(_vdp, z0, ts, (mu,), **kw)
+    ys_int, st_int = odeint(_vdp, z0, ts, (mu,), interpolate_ts=True,
+                            **kw)
+    ys_ref, _ = odeint(_vdp, z0, ts, (mu,), solver="dopri5",
+                       grad_method="aca", rtol=1e-9, atol=1e-9,
+                       max_steps=8192, max_trials=20)
+
+    ref = np.asarray(ys_ref)
+    err_land = float(np.abs(np.asarray(ys_land) - ref).max())
+    err_int = float(np.abs(np.asarray(ys_int) - ref).max())
+    trials_land = int(st_land.n_trials)
+    trials_int = int(st_int.n_trials)
+    speedup = trials_land / max(trials_int, 1)
+
+    emit("dense_eval_trials/landing", trials_land,
+         f"dopri5 aca tol={TOL}, {N_EVAL} forced landings")
+    emit("dense_eval_trials/interpolate_ts", trials_int,
+         "natural grid + per-step interpolant reads")
+    emit("dense_eval_trials/ratio", f"{speedup:.2f}",
+         "landing / interpolated trials")
+    emit("dense_eval_err/landing", f"{err_land:.3e}",
+         "max |y - ref(1e-9)|")
+    emit("dense_eval_err/interpolate_ts", f"{err_int:.3e}",
+         "max |y - ref(1e-9)| incl. interpolation")
+
+    # the tentpole acceptance gates
+    assert speedup >= 1.5, (
+        "interpolate_ts must cut >= 1.5x trials on the dense grid",
+        trials_land, trials_int)
+    assert err_int <= 2e-4, (
+        "interpolation error above the 2e-4 gate", err_int)
+
+    # reverse-time spot check rides along: descending ts hits the same
+    # natural-grid machinery (negated clock).  Short window only — the
+    # vdp limit cycle attracts forward, so long reverse integrations
+    # are genuinely ill-posed (that instability is the paper's Fig. 4
+    # point, not a solver defect)
+    t_rev0 = T1 / 8
+    ys_fwd, _ = odeint(_vdp, z0, jnp.linspace(0.0, t_rev0, 8), (mu,),
+                       **kw)
+    ts_rev = jnp.linspace(t_rev0, 0.0, 8)
+    ys_rev, st_rev = odeint(_vdp, jnp.asarray(ys_fwd[-1]), ts_rev,
+                            (mu,), interpolate_ts=True, **kw)
+    rev_gap = float(np.abs(np.asarray(ys_rev)[-1] - np.asarray(z0)).max())
+    emit("dense_eval_reverse/trials", int(st_rev.n_trials),
+         "descending-ts natural-grid solve back to t0")
+    emit("dense_eval_reverse/roundtrip_gap", f"{rev_gap:.3e}",
+         "|z(0) roundtrip - z0| (forward + reverse solve error)")
+    # loose gate: the roundtrip conditioning number of reverse vdp
+    # amplifies the forward solve's own tolerance-level error
+    assert rev_gap < 1e-2, ("reverse-time roundtrip drifted", rev_gap)
+
+    emit_json("dense_eval", {
+        "n_eval": N_EVAL,
+        "tol": TOL,
+        "trials_landing": trials_land,
+        "trials_interpolated": trials_int,
+        "trial_ratio": round(speedup, 3),
+        "max_err_landing": err_land,
+        "max_err_interpolated": err_int,
+        "reverse_roundtrip_gap": rev_gap,
+    })
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

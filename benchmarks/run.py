@@ -13,8 +13,8 @@ import time
 import traceback
 
 from . import (bench_batched_solve, bench_classification,
-               bench_memory, bench_method_costs, bench_node_lm,
-               bench_reliability, bench_reverse_error,
+               bench_dense_eval, bench_memory, bench_method_costs,
+               bench_node_lm, bench_reliability, bench_reverse_error,
                bench_solver_robustness, bench_threebody,
                bench_timeseries, bench_toy_gradient)
 from .common import emit
@@ -31,6 +31,7 @@ BENCHES = [
     ("node_lm (beyond-paper: LM ablation)", bench_node_lm.run),
     ("batched_solve (beyond-paper: batch_axis)", bench_batched_solve.run),
     ("memory (beyond-paper: segmented ACA)", bench_memory.run),
+    ("dense_eval (beyond-paper: interpolate_ts)", bench_dense_eval.run),
 ]
 
 

@@ -7,7 +7,13 @@ Public API:
     get_tableau / Tableau — explicit RK solvers (Euler..Dopri5)
 """
 
-from .api import GRAD_METHODS, odeint, odeint_final
+from .api import (
+    DenseSolution,
+    GRAD_METHODS,
+    odeint,
+    odeint_dense,
+    odeint_final,
+)
 from .controller import ControllerConfig
 from .integrate import (
     Checkpoints,
@@ -37,7 +43,8 @@ from .tableaus import (
 )
 
 __all__ = [
-    "odeint", "odeint_final", "GRAD_METHODS",
+    "odeint", "odeint_final", "odeint_dense", "DenseSolution",
+    "GRAD_METHODS",
     "ControllerConfig", "SolveStats", "Checkpoints",
     "adaptive_while_solve", "batched_adaptive_while_solve",
     "fixed_grid_solve",

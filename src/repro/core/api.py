@@ -10,12 +10,16 @@
                        trial_budget=None,        # naive-method tape bound
                        use_pallas=False,         # fused flat-state kernels
                        batch_axis=None,          # per-sample batched solve
-                       checkpoint_segments=None) # O(K)-state ACA memory
+                       checkpoint_segments=None, # O(K)-state ACA memory
+                       interpolate_ts=False)     # dense-output eval reads
 
-``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` sorted ascending,
-``ys[k] = z(ts[k])`` with ``ys[0] = z0``.  Gradients flow to ``z0`` and
-``args`` under every method; the methods differ exactly as the paper's
-Table 1 describes.
+``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` strictly
+monotone — ascending for a forward solve, or *descending* for a
+reverse-time solve (internally solved as the time-negated ascending
+problem, so every gradient method — including ACA's bit-exact
+checkpoint replay — works unchanged); ``ys[k] = z(ts[k])`` with
+``ys[0] = z0``.  Gradients flow to ``z0`` and ``args`` under every
+method; the methods differ exactly as the paper's Table 1 describes.
 
 With ``batch_axis=a``, leaves of ``z0`` carry a batch dimension at axis
 ``a`` and ``f`` stays *per-sample*: each batch element is integrated on
@@ -23,17 +27,22 @@ its own adaptive grid (own stepsize controller, own accept/reject, own
 checkpoint buffer) instead of one lockstep decision for the whole batch —
 the semantics of ``jax.vmap`` over the unbatched solver, in one fused
 loop.  ``args`` are shared across the batch (their gradient is summed).
+
+``odeint_dense`` solves once over [t0, t1] and returns a
+``DenseSolution`` carrying every accepted step's interpolant
+coefficients — evaluate it post hoc at arbitrary times.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple, Union
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .controller import ControllerConfig
-from .integrate import SolveStats
+from .integrate import SolveStats, _as_tuple, adaptive_while_solve
 from .odeint_aca import odeint_aca, odeint_aca_batched, odeint_aca_fixed
 from .odeint_adjoint import (
     odeint_adjoint,
@@ -45,11 +54,45 @@ from .odeint_naive import (
     odeint_naive_batched,
     odeint_naive_fixed,
 )
+from .stepper import InterpCoeffs, interp_eval_aligned, maybe_flatten
 from .tableaus import Tableau, get_tableau
 
 PyTree = Any
 
 GRAD_METHODS = ("aca", "adjoint", "naive")
+
+
+def _ts_direction(ts: jnp.ndarray) -> int:
+    """Validate the ``ts`` monotonicity contract; return the direction.
+
+    Returns +1 for strictly ascending, -1 for strictly descending;
+    raises ValueError for anything else (repeated times included) —
+    unsorted input used to silently produce garbage.  Traced ``ts``
+    (inside jit with ts as an argument) cannot be inspected and is
+    assumed ascending — pass concrete eval times to use reverse-time
+    solving.
+    """
+    if isinstance(ts, jax.core.Tracer):
+        return 1
+    d = np.diff(np.asarray(ts))
+    if bool((d > 0).all()):
+        return 1
+    if bool((d < 0).all()):
+        return -1
+    raise ValueError(
+        "ts must be strictly monotone: ascending (forward solve) or "
+        "descending (reverse-time solve); got neither — sort your eval "
+        "times (and deduplicate repeats) before calling odeint")
+
+
+def _negate_time(f: Callable) -> Callable:
+    """The time-negated vector field: solving dz/ds = -f(-s, z) forward
+    over ascending s = -t is exactly the reverse-time solve over
+    descending t."""
+    def f_neg(s, z, *a):
+        return jax.tree.map(jnp.negative, f(-s, z, *a))
+
+    return f_neg
 
 
 def odeint(
@@ -69,6 +112,7 @@ def odeint(
     use_pallas: bool = False,
     batch_axis: Optional[int] = None,
     checkpoint_segments: Optional[Union[int, str]] = None,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """See module docstring for the solver × grad-method matrix.
 
@@ -123,6 +167,25 @@ def odeint(
     ``batch_axis``; raises for other grad methods (they keep no state
     checkpoints to bound) and for fixed-grid solvers.  See
     ``docs/memory.md``.
+
+    ``interpolate_ts=True`` (adaptive solvers only) decouples the eval
+    grid from the step grid: the controller advances on its *natural*
+    accepted steps, clamped only to the final time, and interior
+    ``ts[k]`` are read off each accepted step's local interpolant
+    (4th-order for Dopri5 via its ``b_mid`` dense output, cubic Hermite
+    otherwise) — dense eval grids stop inflating the step count.
+    ``ys[0]``/``ys[-1]`` stay exact solver states; interior outputs
+    carry the interpolant's O(h⁴) error on top of the solve tolerance.
+    Gradients flow through the interpolants under all three methods
+    (ACA replays interval + interpolant exactly).  Default off: the
+    forced-landing trajectories are bit-compatible with earlier
+    releases.  Composes with ``batch_axis``, ``use_pallas``,
+    ``checkpoint_segments`` and descending ``ts``.
+
+    Descending ``ts`` runs the whole solve in reverse time by negating
+    the clock (``dz/ds = -f(-s, z)`` over ascending ``s = -t``): the
+    forward trajectory is bit-identical to the negated-time ascending
+    solve, and all three gradient methods apply unchanged.
     """
     tab = get_tableau(solver) if isinstance(solver, str) else solver
     ts = jnp.asarray(ts)
@@ -137,6 +200,14 @@ def odeint(
             f"adaptive solver (got {grad_method!r} / {tab.name!r}): only "
             "the ACA trajectory checkpoint stores per-step states to "
             "segment")
+    if interpolate_ts and not tab.adaptive:
+        raise ValueError(
+            "interpolate_ts requires an adaptive solver (got "
+            f"{tab.name!r}): fixed grids land on every eval time by "
+            "construction, there is no stepsize search to relieve")
+    if _ts_direction(ts) < 0:
+        # reverse time: solve the time-negated problem over ascending -ts
+        f, ts = _negate_time(f), -ts
 
     cfg = ControllerConfig(max_steps=max_steps, max_trials=max_trials)
 
@@ -146,19 +217,23 @@ def odeint(
             batch_axis=batch_axis, rtol=rtol, atol=atol, cfg=cfg,
             steps_per_interval=steps_per_interval,
             trial_budget=trial_budget, use_pallas=use_pallas,
-            checkpoint_segments=checkpoint_segments)
+            checkpoint_segments=checkpoint_segments,
+            interpolate_ts=interpolate_ts)
 
     if tab.adaptive:
         if grad_method == "aca":
             return odeint_aca(f, z0, ts, args, solver=tab, rtol=rtol,
                               atol=atol, cfg=cfg, use_pallas=use_pallas,
-                              checkpoint_segments=checkpoint_segments)
+                              checkpoint_segments=checkpoint_segments,
+                              interpolate_ts=interpolate_ts)
         if grad_method == "adjoint":
             return odeint_adjoint(f, z0, ts, args, solver=tab, rtol=rtol,
-                                  atol=atol, cfg=cfg, use_pallas=use_pallas)
+                                  atol=atol, cfg=cfg, use_pallas=use_pallas,
+                                  interpolate_ts=interpolate_ts)
         return odeint_naive(f, z0, ts, args, solver=tab, rtol=rtol,
                             atol=atol, cfg=cfg, trial_budget=trial_budget,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas,
+                            interpolate_ts=interpolate_ts)
 
     if grad_method == "aca":
         return odeint_aca_fixed(f, z0, ts, args, solver=tab,
@@ -189,6 +264,7 @@ def _odeint_batched(
     trial_budget: Optional[int],
     use_pallas: bool,
     checkpoint_segments: Optional[Union[int, str]] = None,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Batched dispatch behind ``odeint(..., batch_axis=a)``.
 
@@ -197,9 +273,17 @@ def _odeint_batched(
     grid with a vmapped field, then restores the caller's batch axis in
     ``ys`` (which sits one axis deeper under the leading time axis).
     """
-    leaves = jax.tree.leaves(z0)
-    if not leaves:
+    flat, _ = jax.tree_util.tree_flatten_with_path(z0)
+    if not flat:
         raise ValueError("batch_axis requires a non-empty state")
+    for path, leaf in flat:
+        if jnp.ndim(leaf) == 0:
+            raise ValueError(
+                f"batch_axis={batch_axis} requires every state leaf to "
+                f"carry a batch dimension, but leaf "
+                f"{jax.tree_util.keystr(path) or '<root>'} is rank-0 "
+                "(a scalar has no axis to batch over)")
+    leaves = [leaf for _, leaf in flat]
     # normalize per leaf: leaves may have different ranks, and a negative
     # axis must resolve before the != 0 checks and the ys restore below
     axes = jax.tree.map(lambda l: batch_axis % l.ndim, z0)
@@ -218,15 +302,18 @@ def _odeint_batched(
             ys, stats = odeint_aca_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
                 cfg=cfg, use_pallas=use_pallas,
-                checkpoint_segments=checkpoint_segments)
+                checkpoint_segments=checkpoint_segments,
+                interpolate_ts=interpolate_ts)
         elif grad_method == "adjoint":
             ys, stats = odeint_adjoint_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, use_pallas=use_pallas)
+                cfg=cfg, use_pallas=use_pallas,
+                interpolate_ts=interpolate_ts)
         else:
             ys, stats = odeint_naive_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, trial_budget=trial_budget, use_pallas=use_pallas)
+                cfg=cfg, trial_budget=trial_budget, use_pallas=use_pallas,
+                interpolate_ts=interpolate_ts)
     else:
         # fixed grids are identical for every element — lockstep IS the
         # per-sample grid; vmap the field over the batched state and
@@ -257,6 +344,17 @@ def _odeint_batched(
     return ys, stats
 
 
+def _time_dtype(*times) -> jnp.dtype:
+    """Float dtype for a time grid built from scalars: explicit dtypes
+    win; weak Python floats resolve to the default float dtype, so
+    ``JAX_ENABLE_X64`` solves get float64 endpoints instead of a
+    silently-truncating hardcoded float32."""
+    tdt = jnp.result_type(*times)
+    if not jnp.issubdtype(tdt, jnp.floating):
+        tdt = jnp.result_type(float)
+    return tdt
+
+
 def odeint_final(
     f: Callable,
     z0: PyTree,
@@ -269,6 +367,108 @@ def odeint_final(
 
     Accepts every ``odeint`` keyword, including ``batch_axis`` — the
     returned z(t1) then keeps the batch dimension where ``z0`` had it.
+    ``t0 > t1`` runs the solve in reverse time (descending ``ts``).
     """
-    ys, stats = odeint(f, z0, jnp.asarray([t0, t1], jnp.float32), args, **kw)
+    ts = jnp.asarray([t0, t1], _time_dtype(t0, t1))
+    ys, stats = odeint(f, z0, ts, args, **kw)
     return jax.tree.map(lambda y: y[-1], ys), stats
+
+
+class DenseSolution(NamedTuple):
+    """A continuously-evaluable ODE solution (``odeint_dense``).
+
+    Carries every accepted step's interpolant: ``t``/``h`` the interval
+    start times and stepsizes *in internal (ascending) time*, ``coeffs``
+    the fitted polynomial coefficients (``stepper.InterpCoeffs``; leaves
+    lead with the step axis), ``n`` the number of valid steps and
+    ``sign`` (+1/-1) mapping user time to internal time (-1 for a
+    reverse-time solve over t1 < t0).  Slots past ``n`` are garbage.
+
+    ``evaluate(t)`` interpolates at arbitrary times inside [t0, t1]
+    (times outside clamp to the nearest endpoint); it is a pytree of
+    plain jnp gathers + polynomial evaluation, so it jits/vmaps freely.
+    The producing solve runs inside a ``lax.while_loop`` — treat the
+    solution as *forward-only* (no gradients to z0/args through it; use
+    ``odeint(..., interpolate_ts=True)`` when you need gradients at
+    fixed eval times).
+    """
+    t: jnp.ndarray            # (max_steps,) interval start times
+    h: jnp.ndarray            # (max_steps,) accepted stepsizes
+    coeffs: Any               # InterpCoeffs, leaves (max_steps, ...)
+    n: jnp.ndarray            # valid step count
+    sign: jnp.ndarray         # +1.0 / -1.0 (user time = sign * internal)
+
+    def evaluate(self, t) -> PyTree:
+        """State at time(s) ``t`` — scalar or any-shape array; returned
+        leaves lead with ``t``'s shape."""
+        tdt = self.t.dtype
+        tq = jnp.asarray(t, tdt) * self.sign
+        qshape = tq.shape
+        tq = tq.reshape(-1)
+        # invalid slots -> +inf keeps the knot array sorted for the
+        # bisection; clip lands every query on a valid interval
+        slots = jnp.arange(self.t.shape[0])
+        knots = jnp.where(slots < self.n, self.t,
+                          jnp.asarray(jnp.inf, tdt))
+        idx = jnp.clip(jnp.searchsorted(knots, tq, side="right") - 1,
+                       0, jnp.maximum(self.n - 1, 0))
+        t_i, h_i = self.t[idx], self.h[idx]
+        tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+        theta = jnp.clip((tq - t_i) / jnp.maximum(h_i, tiny), 0.0, 1.0)
+        coeffs_q = jax.tree.map(lambda b: b[idx], self.coeffs)
+        vals = interp_eval_aligned(InterpCoeffs(*coeffs_q), theta)
+        return jax.tree.map(
+            lambda v: v.reshape(qshape + v.shape[1:]), vals)
+
+
+def odeint_dense(
+    f: Callable,
+    z0: PyTree,
+    t0: float,
+    t1: float,
+    args: PyTree = (),
+    *,
+    solver: Union[str, Tableau] = "dopri5",
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    max_steps: int = 256,
+    max_trials: int = 12,
+    use_pallas: bool = False,
+) -> Tuple[DenseSolution, SolveStats]:
+    """Solve dz/dt = f(t, z, *args) over [t0, t1] once and return a
+    ``DenseSolution`` for post-hoc evaluation at arbitrary times.
+
+    The adaptive controller advances on its natural grid (no interior
+    landings) and every accepted step's interpolant coefficients are
+    stored — memory O(N_f · dim · 5) — so ``sol.evaluate(t)`` costs one
+    bisection plus one polynomial evaluation per query, with the same
+    accuracy contract as ``interpolate_ts``.  ``t1 < t0`` solves in
+    reverse time; ``evaluate`` then takes user (descending-side) times.
+    Forward/inference only — the producing while_loop is not
+    reverse-differentiable.  ``stats.overflow`` set means the solve ran
+    out of ``max_steps`` before reaching t1 (the solution is then only
+    valid up to the last accepted step).
+    """
+    tab = get_tableau(solver) if isinstance(solver, str) else solver
+    if not tab.adaptive:
+        raise ValueError(
+            f"odeint_dense requires an adaptive solver (got {tab.name!r})")
+    tdt = _time_dtype(t0, t1)
+    ts = jnp.asarray([t0, t1], tdt)
+    if _ts_direction(ts) < 0:
+        f, ts = _negate_time(f), -ts
+        sign = jnp.asarray(-1.0, tdt)
+    else:
+        sign = jnp.asarray(1.0, tdt)
+
+    cfg = ControllerConfig(max_steps=max_steps, max_trials=max_trials)
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
+    _, ckpts, stats = adaptive_while_solve(
+        tab, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
+        use_pallas=use_pallas, store_coeffs=True)
+    coeffs = ckpts.coeffs
+    if unravel is not None:
+        coeffs = InterpCoeffs(*(jax.vmap(unravel)(c) for c in coeffs))
+    sol = DenseSolution(t=ckpts.t, h=ckpts.h, coeffs=coeffs, n=ckpts.n,
+                        sign=sign)
+    return sol, stats

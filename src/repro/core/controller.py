@@ -74,9 +74,11 @@ def initial_stepsize(f, t0, z0, args, order: int, rtol: float, atol: float):
     f1 = f(t0 + h0, z1, *args)
     d2 = _norm(jax.tree.map(lambda a, b, s: (a - b) / s, f1, f0, scale)) / h0
     dmax = jnp.maximum(d1, d2)
+    # Hairer I.4 step (f): h1 = (0.01 / max(d1, d2))^(1/(p+1)) — the
+    # exponent is 1/(order + 1), matching the local error O(h^{p+1})
     h1 = jnp.where(
         dmax <= 1e-15,
         jnp.maximum(1e-6, h0 * 1e-3),
-        (0.01 / dmax) ** (1.0 / float(order)),
+        (0.01 / dmax) ** (1.0 / (float(order) + 1.0)),
     )
     return jnp.minimum(100.0 * h0, h1)

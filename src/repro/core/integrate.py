@@ -46,7 +46,10 @@ import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
 from .stepper import (
+    InterpCoeffs,
     error_ratio,
+    interp_eval,
+    interp_fit,
     maybe_flatten,
     rk_step,
     rk_step_batched,
@@ -54,6 +57,12 @@ from .stepper import (
 from .tableaus import Tableau
 
 PyTree = Any
+
+
+def _as_tuple(args) -> Tuple:
+    """Normalize an ``args`` pytree to the *args tuple ``f`` receives —
+    the one rule shared by every odeint entry point."""
+    return args if isinstance(args, tuple) else (args,)
 
 
 class SolveStats(NamedTuple):
@@ -94,6 +103,14 @@ class Checkpoints(NamedTuple):
     (B, max_steps, ...) — or (B, K, ...) snapshots — and ``n`` (B,);
     each element records its *own* accepted grid, which the ACA backward
     sweep replays per element.
+
+    Natural-grid mode (``interpolate_ts``): interior eval times are no
+    longer step landings, so ``out_idx`` marks only the *final* eval
+    time; ``ev_lo``/``ev_hi`` record the half-open range of eval indices
+    whose times fall inside accepted interval i — the ACA backward sweep
+    re-injects those cotangents through the interval's interpolant.
+    ``coeffs`` (dense-solution mode only) stores the fitted interpolant
+    coefficients of every accepted step.
     """
     t: jnp.ndarray            # (max_steps,)
     h: jnp.ndarray            # (max_steps,)
@@ -101,6 +118,9 @@ class Checkpoints(NamedTuple):
     out_idx: jnp.ndarray      # (max_steps,) int32
     n: jnp.ndarray            # number of valid slots
     k0: Optional[PyTree] = None   # (K, ...) stage-0 derivative snapshots
+    ev_lo: Optional[jnp.ndarray] = None   # (max_steps,) int32
+    ev_hi: Optional[jnp.ndarray] = None   # (max_steps,) int32
+    coeffs: Optional[Any] = None  # InterpCoeffs of (max_steps, ...) buffers
 
 
 def resolve_checkpoint_segments(spec, max_steps: int) -> Optional[int]:
@@ -197,6 +217,68 @@ def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
+def natural_grid_outputs(ts, karr, tiny, t, t_new, h_use, accept, hit,
+                         eval_idx, ys, z, z_next, k0, k1, z_mid):
+    """One trial's output writes in natural-grid (``interpolate_ts``)
+    mode, shared by the solo adaptive engine and the solo naive scan.
+
+    Interior eval times covered by an accepted interval are read off its
+    interpolant; ``ts[-1]`` stays an exact landing, and a final-landing
+    ``hit`` covers every remaining interior time (θ clips to 1), so no
+    eval index is ever skipped.  Returns ``(ys, coeffs, n_cov,
+    eval_advance)`` — the updated output buffer, the fitted interpolant
+    (for coefficient storage), the interior-cover count and the
+    ``eval_idx`` increment.  All plain jnp: differentiable on the naive
+    tape, masked no-op on rejected trials.
+    """
+    n_eval = ts.shape[0]
+    covered = (accept & (karr >= eval_idx)
+               & (karr < n_eval - 1) & ((ts <= t_new) | hit))
+    # dtype pinned: x64 would promote a plain sum to int64 and break
+    # the loop carry
+    n_cov = jnp.sum(covered, dtype=jnp.int32)
+    coeffs = interp_fit(z, z_next, k0, k1, h_use, z_mid)
+    theta = jnp.clip((ts - t) / jnp.maximum(h_use, tiny), 0.0, 1.0)
+    yint = interp_eval(coeffs, theta)
+    ys = jax.tree.map(
+        lambda b, v: jnp.where(
+            covered.reshape((n_eval,) + (1,) * (v.ndim - 1)), v, b),
+        ys, yint)
+    ys = jax.tree.map(
+        lambda b, v: b.at[n_eval - 1].set(
+            jnp.where(hit, v, b[n_eval - 1])),
+        ys, z_next)
+    return ys, coeffs, n_cov, n_cov + hit.astype(jnp.int32)
+
+
+def natural_grid_outputs_batched(ts, karr, tiny, rows, t, t_new, h_use,
+                                 accept, hit, eval_idx, ys, z, z_next,
+                                 k0, k1, z_mid):
+    """Batched twin of ``natural_grid_outputs``: per-row times/steps,
+    (n_eval, B) cover mask, per-row ``n_cov``/``eval_advance``."""
+    n_eval = ts.shape[0]
+    covered = (accept[None, :]
+               & (karr[:, None] >= eval_idx[None, :])
+               & (karr[:, None] < n_eval - 1)
+               & ((ts[:, None] <= t_new[None, :])
+                  | hit[None, :]))                      # (n_eval, B)
+    n_cov = jnp.sum(covered, axis=0, dtype=jnp.int32)   # (B,)
+    coeffs = interp_fit(z, z_next, k0, k1, h_use, z_mid)
+    theta = jnp.clip(
+        (ts[:, None] - t[None, :])
+        / jnp.maximum(h_use, tiny)[None, :], 0.0, 1.0)
+    yint = interp_eval(coeffs, theta)                   # (n_eval, B, ...)
+    ys = jax.tree.map(
+        lambda b, v: jnp.where(
+            covered.reshape(covered.shape + (1,) * (v.ndim - 2)), v, b),
+        ys, yint)
+    ys = jax.tree.map(
+        lambda b, v: b.at[n_eval - 1, rows].set(
+            _bwhere(hit, v, b[n_eval - 1, rows])),
+        ys, z_next)
+    return ys, coeffs, n_cov, n_cov + hit.astype(jnp.int32)
+
+
 def adaptive_while_solve(
     tab: Tableau,
     f: Callable,
@@ -209,6 +291,8 @@ def adaptive_while_solve(
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     checkpoint_segments: Optional[int] = None,
+    interpolate_ts: bool = False,
+    store_coeffs: bool = False,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Integrate dz/dt = f(t, z, *args) through increasing times ``ts``.
 
@@ -227,6 +311,18 @@ def adaptive_while_solve(
     coarse snapshots written every ``segment_length(K, max_steps)``
     accepted steps; the scalar grids still record every step so a
     segmented ACA backward sweep can re-integrate losslessly.
+
+    ``interpolate_ts`` switches to the *natural-grid* mode: the stepper
+    is clamped only to the final time ``ts[-1]`` (not to every interior
+    eval time), and interior outputs are read off each accepted step's
+    local interpolant (``stepper.interp_fit``) — dense eval grids stop
+    inflating the accepted-step count.  ``ys[0]`` and ``ys[-1]`` stay
+    exact solver states; the checkpoint records ``ev_lo``/``ev_hi`` per
+    interval so the ACA backward sweep can re-inject interpolated-output
+    cotangents.  ``store_coeffs`` additionally saves every accepted
+    step's interpolant coefficients in ``Checkpoints.coeffs`` (the
+    dense-solution mode of ``odeint_dense``); it implies the natural
+    grid.
     """
     n_eval = ts.shape[0]
     tdt = ts.dtype
@@ -234,6 +330,7 @@ def adaptive_while_solve(
     # trial budget: every accepted step costs >= 1 trial
     max_total_trials = max_steps * cfg.max_trials
     n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
+    natural = interpolate_ts or store_coeffs
 
     if h0 is None:
         h0 = initial_stepsize(f, ts[0], z0, args, tab.order, rtol, atol)
@@ -261,8 +358,16 @@ def adaptive_while_solve(
         # segmented replay re-chains FSAL reuse, so the k0 carry is
         # snapshotted next to the state at each segment boundary
         carry0["ckpt_k0"] = _empty_buffer(k0, n_snap)
+    if natural:
+        # per-interval half-open eval-index ranges for the ACA backward
+        carry0["ckpt_elo"] = jnp.zeros((max_steps,), jnp.int32)
+        carry0["ckpt_ehi"] = jnp.zeros((max_steps,), jnp.int32)
+    if store_coeffs:
+        carry0["ckpt_cf"] = InterpCoeffs(*(
+            _empty_buffer(z0, max_steps) for _ in range(5)))
 
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+    karr = jnp.arange(n_eval)
 
     def cond(c):
         return (
@@ -273,13 +378,16 @@ def adaptive_while_solve(
 
     def body(c):
         t, z, h = c["t"], c["z"], c["h"]
-        t_target = ts[c["eval_idx"]]
-        # clamp trial step to land exactly on the next eval time
+        # natural grid: only the final time is a forced landing; the
+        # controller otherwise picks its own accepted points
+        t_target = ts[n_eval - 1] if natural else ts[c["eval_idx"]]
+        # clamp trial step to land exactly on the target eval time
         h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
         h_use = jnp.clip(h, h_min, t_target - t)
         res = rk_step(tab, f, t, z, h_use, args, k0=c["k0"],
                       use_pallas=use_pallas,
-                      err_scale=(rtol, atol) if tab.adaptive else None)
+                      err_scale=(rtol, atol) if tab.adaptive else None,
+                      dense=natural)
         nfe = c["nfe"] + (tab.stages - 1)
 
         if tab.adaptive:
@@ -295,6 +403,19 @@ def adaptive_while_solve(
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
             jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # FSAL / first-stage reuse:
+        #  - reject: (t, z) unchanged -> k0 still valid, 0 extra evals
+        #  - accept + FSAL tableau: k0' = last stage of accepted step
+        #  - accept + non-FSAL: recompute k0' = f(t', z')
+        # (computed before the output writes: in natural-grid mode k0'
+        # doubles as the interval-end derivative of the interpolant)
+        if tab.fsal:
+            k0_acc = res.k_last
+            nfe_acc = nfe
+        else:
+            k0_acc = f(t_new, res.z_next, *args)
+            nfe_acc = nfe + 1
 
         # --- on accept: write trajectory checkpoint (t_i, h_i, z_i) -------
         i = c["i"]
@@ -317,15 +438,38 @@ def adaptive_while_solve(
             ckpt_k0 = jax.tree.map(
                 lambda b, v: b.at[s].set(jnp.where(snap, v, b[s])),
                 c["ckpt_k0"], c["k0"])
-        oi_val = jnp.where(hit, c["eval_idx"], jnp.asarray(-1, jnp.int32))
+        final_idx = jnp.asarray(n_eval - 1, jnp.int32)
+        oi_val = jnp.where(hit, final_idx if natural else c["eval_idx"],
+                           jnp.asarray(-1, jnp.int32))
         ckpt_oi = c["ckpt_oi"].at[i].set(
             jnp.where(accept, oi_val, c["ckpt_oi"][i]))
 
-        # --- on eval-time hit: record output ------------------------------
-        ys = jax.tree.map(
-            lambda b, v: b.at[c["eval_idx"]].set(
-                jnp.where(hit, v, b[c["eval_idx"]])),
-            c["ys"], res.z_next)
+        # --- outputs ------------------------------------------------------
+        extra = {}
+        if natural:
+            ys, coeffs, n_cov, eval_advance = natural_grid_outputs(
+                ts, karr, tiny, t, t_new, h_use, accept, hit,
+                c["eval_idx"], c["ys"], z, res.z_next, res.k_first,
+                k0_acc, res.z_mid)
+            extra["ckpt_elo"] = c["ckpt_elo"].at[i].set(
+                jnp.where(accept, c["eval_idx"], c["ckpt_elo"][i]))
+            extra["ckpt_ehi"] = c["ckpt_ehi"].at[i].set(
+                jnp.where(accept, c["eval_idx"] + n_cov,
+                          c["ckpt_ehi"][i]))
+            if store_coeffs:
+                extra["ckpt_cf"] = InterpCoeffs(*(
+                    jax.tree.map(
+                        lambda b, v: b.at[i].set(jnp.where(accept, v,
+                                                           b[i])),
+                        cb, cv)
+                    for cb, cv in zip(c["ckpt_cf"], coeffs)))
+        else:
+            # --- on eval-time hit: record output --------------------------
+            ys = jax.tree.map(
+                lambda b, v: b.at[c["eval_idx"]].set(
+                    jnp.where(hit, v, b[c["eval_idx"]])),
+                c["ys"], res.z_next)
+            eval_advance = hit.astype(jnp.int32)
 
         # --- stepsize control ---------------------------------------------
         h_next = propose_stepsize(
@@ -333,16 +477,6 @@ def adaptive_while_solve(
         # (the paper's Algo 1: shrink and retry on reject; grow on accept)
         h_next = jnp.asarray(h_next, tdt)
 
-        # FSAL / first-stage reuse:
-        #  - reject: (t, z) unchanged -> k0 still valid, 0 extra evals
-        #  - accept + FSAL tableau: k0' = last stage of accepted step
-        #  - accept + non-FSAL: recompute k0' = f(t', z')
-        if tab.fsal:
-            k0_acc = res.k_last
-            nfe_acc = nfe
-        else:
-            k0_acc = f(t_new, res.z_next, *args)
-            nfe_acc = nfe + 1
         k0_new = _where_tree(accept, k0_acc, c["k0"])
         nfe = jnp.where(accept, nfe_acc, nfe)
 
@@ -354,7 +488,7 @@ def adaptive_while_solve(
             prev_ratio=jnp.where(
                 accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
             i=i + accept.astype(jnp.int32),
-            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + eval_advance,
             trials=c["trials"] + 1,
             nfe=nfe,
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
@@ -362,6 +496,7 @@ def adaptive_while_solve(
         )
         if ckpt_k0 is not None:
             out["ckpt_k0"] = ckpt_k0
+        out.update(extra)
         return out
 
     c = jax.lax.while_loop(cond, body, carry0)
@@ -369,7 +504,9 @@ def adaptive_while_solve(
     overflow = c["eval_idx"] < n_eval
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
                         out_idx=c["ckpt_oi"], n=c["i"],
-                        k0=c.get("ckpt_k0"))
+                        k0=c.get("ckpt_k0"),
+                        ev_lo=c.get("ckpt_elo"), ev_hi=c.get("ckpt_ehi"),
+                        coeffs=c.get("ckpt_cf"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
                        overflow=overflow)
     return c["ys"], ckpts, stats
@@ -396,6 +533,7 @@ def batched_adaptive_while_solve(
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     checkpoint_segments: Optional[int] = None,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Per-sample batched adaptive solve: one fused while_loop, one
     stepsize controller *per batch element*.
@@ -417,7 +555,10 @@ def batched_adaptive_while_solve(
     and runs every trial through the batched fused kernels with per-row
     error norms.  ``checkpoint_segments`` as in ``adaptive_while_solve``:
     each element writes its own K snapshot rows at its own segment
-    boundaries.
+    boundaries.  ``interpolate_ts`` as in ``adaptive_while_solve``:
+    every element advances on its own natural grid and reads interior
+    eval times off its own per-step interpolants (per-element
+    ``ev_lo``/``ev_hi`` rows feed the batched ACA backward sweep).
     """
     if not tab.adaptive:
         raise ValueError("batched_adaptive_while_solve requires an "
@@ -460,8 +601,13 @@ def batched_adaptive_while_solve(
         carry0["ckpt_k0"] = jax.tree.map(
             lambda l: jnp.zeros((l.shape[0], n_snap) + l.shape[1:],
                                 l.dtype), k0)
+    if interpolate_ts:
+        # per-element half-open eval-index ranges per accepted interval
+        carry0["ckpt_elo"] = jnp.zeros((B, max_steps), jnp.int32)
+        carry0["ckpt_ehi"] = jnp.zeros((B, max_steps), jnp.int32)
 
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+    karr = jnp.arange(n_eval)
 
     def live_mask(c):
         return (
@@ -476,20 +622,34 @@ def batched_adaptive_while_solve(
     def body(c):
         live = live_mask(c)
         t, z, h = c["t"], c["z"], c["h"]
-        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]   # (B,)
+        # natural grid: only the final time is a forced landing
+        t_target = ts[n_eval - 1] if interpolate_ts else \
+            ts[jnp.minimum(c["eval_idx"], n_eval - 1)]          # (B,)
         h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
         # dead elements step with h = 0: ψ degenerates to the identity
         h_use = jnp.where(live, jnp.clip(h, h_min, t_target - t),
                           jnp.zeros((), tdt))
         res = rk_step_batched(tab, f, t, z, h_use, targs, k0=c["k0"],
                               use_pallas=use_pallas,
-                              err_scale=(rtol, atol))
+                              err_scale=(rtol, atol),
+                              dense=interpolate_ts)
         ratio = res.err_ratio                                   # (B,)
         accept = live & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
             jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # FSAL / first-stage reuse, per element (hoisted before the
+        # output writes: in natural-grid mode k0' doubles as the
+        # interval-end derivative of each element's interpolant)
+        if tab.fsal:
+            k0_acc = res.k_last
+            nfe_acc = jnp.zeros((B,), jnp.int32)
+        else:
+            k0_acc = jax.vmap(lambda ti, zi: f(ti, zi, *targs))(
+                t_new, res.z_next)
+            nfe_acc = jnp.ones((B,), jnp.int32)
 
         # --- on accept: write each element's own checkpoint row ----------
         i_c = jnp.minimum(c["i"], max_steps - 1)
@@ -517,30 +677,41 @@ def batched_adaptive_while_solve(
                 lambda b, v: b.at[rows, s].set(_bwhere(snap, v,
                                                        b[rows, s])),
                 c["ckpt_k0"], c["k0"])
-        oi_val = jnp.where(hit, c["eval_idx"], jnp.full((B,), -1,
-                                                        jnp.int32))
+        final_idx = jnp.asarray(n_eval - 1, jnp.int32)
+        oi_val = jnp.where(hit,
+                           final_idx if interpolate_ts else c["eval_idx"],
+                           jnp.full((B,), -1, jnp.int32))
         ckpt_oi = c["ckpt_oi"].at[rows, i_c].set(
             jnp.where(accept, oi_val, c["ckpt_oi"][rows, i_c]))
 
-        # --- on eval-time hit: record that element's output --------------
-        e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
-        ys = jax.tree.map(
-            lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
-            c["ys"], res.z_next)
+        # --- outputs ------------------------------------------------------
+        extra = {}
+        if interpolate_ts:
+            # each element reads the eval times its accepted interval
+            # covers off its own interpolant
+            ys, _, n_cov, eval_advance = natural_grid_outputs_batched(
+                ts, karr, tiny, rows, t, t_new, h_use, accept, hit,
+                c["eval_idx"], c["ys"], z, res.z_next, res.k_first,
+                k0_acc, res.z_mid)
+            extra["ckpt_elo"] = c["ckpt_elo"].at[rows, i_c].set(
+                jnp.where(accept, c["eval_idx"], c["ckpt_elo"][rows, i_c]))
+            extra["ckpt_ehi"] = c["ckpt_ehi"].at[rows, i_c].set(
+                jnp.where(accept, c["eval_idx"] + n_cov,
+                          c["ckpt_ehi"][rows, i_c]))
+        else:
+            # --- on eval-time hit: record that element's output ----------
+            e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
+            ys = jax.tree.map(
+                lambda b, v: b.at[e_c, rows].set(
+                    _bwhere(hit, v, b[e_c, rows])),
+                c["ys"], res.z_next)
+            eval_advance = hit.astype(jnp.int32)
 
         # --- per-element stepsize control ---------------------------------
         h_next = propose_stepsize(
             cfg, h_use, ratio, c["prev_ratio"], tab.order)
         h_next = jnp.asarray(h_next, tdt)
 
-        # FSAL / first-stage reuse, per element (see adaptive_while_solve)
-        if tab.fsal:
-            k0_acc = res.k_last
-            nfe_acc = jnp.zeros((B,), jnp.int32)
-        else:
-            k0_acc = jax.vmap(lambda ti, zi: f(ti, zi, *targs))(
-                t_new, res.z_next)
-            nfe_acc = jnp.ones((B,), jnp.int32)
         k0_new = _bwhere_tree(accept, k0_acc, c["k0"])
         # finished elements take the h=0 identity trial for free: only
         # live elements pay f-evals in the per-element stats
@@ -555,7 +726,7 @@ def batched_adaptive_while_solve(
             prev_ratio=jnp.where(
                 accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
             i=c["i"] + accept.astype(jnp.int32),
-            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + eval_advance,
             trials=c["trials"] + live.astype(jnp.int32),
             nfe=nfe,
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
@@ -563,6 +734,7 @@ def batched_adaptive_while_solve(
         )
         if ckpt_k0 is not None:
             out["ckpt_k0"] = ckpt_k0
+        out.update(extra)
         return out
 
     c = jax.lax.while_loop(cond, body, carry0)
@@ -570,7 +742,8 @@ def batched_adaptive_while_solve(
     overflow = c["eval_idx"] < n_eval
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
                         out_idx=c["ckpt_oi"], n=c["i"],
-                        k0=c.get("ckpt_k0"))
+                        k0=c.get("ckpt_k0"),
+                        ev_lo=c.get("ckpt_elo"), ev_hi=c.get("ckpt_ehi"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
                        overflow=overflow)
     return c["ys"], ckpts, stats

@@ -50,6 +50,10 @@ class NodeConfig:
     max_steps: int = 32
     steps_per_interval: int = 4     # fixed-grid regime
     regime: str = "adaptive"        # adaptive | fixed
+    # integration window [t0, t1]; t0 > t1 runs the block in REVERSE
+    # time (odeint's descending-ts path) — e.g. inverting a flow or
+    # stacking forward/backward blocks
+    t0: float = 0.0
     t1: float = 1.0
     use_pallas: bool = False        # fused flat-state solver kernels
     # per-sample batched solving: axis of z0 carrying the batch (None =
@@ -79,7 +83,7 @@ def node_block_apply(
 
     if cfg.regime == "fixed":
         zT, _ = odeint_final(
-            f, z0, 0.0, cfg.t1, (params,),
+            f, z0, cfg.t0, cfg.t1, (params,),
             solver=_fixed_solver_for(cfg.solver),
             grad_method=cfg.grad_method,
             steps_per_interval=cfg.steps_per_interval,
@@ -91,7 +95,7 @@ def node_block_apply(
         )
     else:
         zT, _ = odeint_final(
-            f, z0, 0.0, cfg.t1, (params,),
+            f, z0, cfg.t0, cfg.t1, (params,),
             solver=cfg.solver,
             grad_method=cfg.grad_method,
             rtol=cfg.rtol, atol=cfg.atol,

@@ -46,6 +46,7 @@ from .controller import ControllerConfig
 from .integrate import (
     Checkpoints,
     SolveStats,
+    _as_tuple,
     _bwhere,
     adaptive_while_solve,
     batched_adaptive_while_solve,
@@ -53,6 +54,8 @@ from .integrate import (
     resolve_segmentation,
 )
 from .stepper import (
+    interp_eval,
+    interp_fit,
     maybe_flatten,
     maybe_flatten_batched,
     rk_step,
@@ -63,6 +66,40 @@ from .tableaus import Tableau
 PyTree = Any
 
 
+def _local_step_dense(tab, f, t_i, h_i, z_i, a, ts, use_pallas):
+    """Replay one ψ with the saved stepsize AND rebuild its interpolant,
+    evaluated at every eval time (natural-grid ACA backward).
+
+    Returns (z_next, y_all) with ``y_all`` leaves (n_eval, ...): the
+    interval's interpolant read at all of ``ts`` (θ clipped to [0, 1];
+    out-of-interval slots get masked-zero cotangents by the caller, so
+    their values are irrelevant but finite).  The recomputed k0/k1 are
+    bit-identical to the forward's FSAL-chained carries, so the
+    interpolant equals the forward interpolant bitwise.
+    """
+    targs = _as_tuple(a)
+    res = rk_step(tab, f, t_i, z_i, h_i, targs, use_pallas=use_pallas,
+                  dense=True)
+    if tab.fsal:
+        k1 = res.k_last
+    else:
+        k1 = f(t_i + h_i, res.z_next, *targs)
+    coeffs = interp_fit(z_i, res.z_next, res.k_first, k1, h_i, res.z_mid)
+    tiny = jnp.asarray(jnp.finfo(ts.dtype).eps, ts.dtype)
+    theta = jnp.clip((ts - t_i) / jnp.maximum(h_i, tiny), 0.0, 1.0)
+    return res.z_next, interp_eval(coeffs, theta)
+
+
+def _mask_cotangents(g_ys: PyTree, mask: jnp.ndarray) -> PyTree:
+    """Zero every g_ys slot outside ``mask`` (mask aligns with the
+    leading eval axis — or (n_eval, B) for batched cotangents)."""
+    return jax.tree.map(
+        lambda g: jnp.where(
+            mask.reshape(mask.shape + (1,) * (g.ndim - mask.ndim)),
+            g, jnp.zeros((), g.dtype)),
+        g_ys)
+
+
 def _aca_backward_sweep(
     tab: Tableau,
     f: Callable,
@@ -71,6 +108,7 @@ def _aca_backward_sweep(
     g_ys: PyTree,
     n_steps,
     use_pallas: bool = False,
+    ts: Optional[jnp.ndarray] = None,
 ):
     """Reverse sweep over the trajectory checkpoints.
 
@@ -79,7 +117,14 @@ def _aca_backward_sweep(
     eval time ts[k]).  ``use_pallas`` replays each local ψ through the
     fused flat-state kernels (their custom_vjp makes them legal under
     the jax.vjp below).
+
+    Natural-grid checkpoints (``ckpts.ev_lo`` present; requires ``ts``)
+    additionally route the cotangents of *interpolated* outputs through
+    each interval's rebuilt interpolant: the local vjp differentiates
+    (z_i, args) ↦ (z_next, interpolated y's), with g_ys masked to the
+    interval's recorded [ev_lo, ev_hi) eval range.
     """
+    interp = ckpts.ev_lo is not None
 
     def local_step(t_i, h_i, z_i, a):
         # one ψ with the SAVED stepsize; k0 recomputed so its gradient flows
@@ -88,6 +133,7 @@ def _aca_backward_sweep(
 
     lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))
     gargs0 = jax.tree.map(jnp.zeros_like, args)
+    karr = jnp.arange(jax.tree.leaves(g_ys)[0].shape[0])
 
     def body(j, carry):
         lam, gargs = carry
@@ -106,9 +152,16 @@ def _aca_backward_sweep(
         lam = jax.lax.cond(oi >= 0, add_out, lambda l: l, lam)
 
         # local forward + local backward (paper Algorithm 2, backward-pass)
-        _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a), z_i,
-                            args)
-        dlam, dargs = vjp_fn(lam)
+        if interp:
+            mask = (karr >= ckpts.ev_lo[i]) & (karr < ckpts.ev_hi[i])
+            _, vjp_fn = jax.vjp(
+                lambda z, a: _local_step_dense(tab, f, t_i, h_i, z, a,
+                                               ts, use_pallas), z_i, args)
+            dlam, dargs = vjp_fn((lam, _mask_cotangents(g_ys, mask)))
+        else:
+            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
+                                z_i, args)
+            dlam, dargs = vjp_fn(lam)
         gargs = jax.tree.map(jnp.add, gargs, dargs)
         return (dlam, gargs)
 
@@ -131,6 +184,7 @@ def _aca_backward_sweep_segmented(
     n_steps,
     seg_len: int,
     use_pallas: bool = False,
+    ts: Optional[jnp.ndarray] = None,
 ):
     """Segmented (O(K)-state) reverse sweep: ``checkpoint_segments=K``.
 
@@ -148,8 +202,13 @@ def _aca_backward_sweep_segmented(
     state memory is O(K + seg_len) = O(K + N_f/K) instead of O(N_f),
     for one extra ψ per accepted step.
 
+    Natural-grid checkpoints (``ckpts.ev_lo`` present; requires ``ts``)
+    route interpolated-output cotangents through each replayed
+    interval's interpolant, exactly as in ``_aca_backward_sweep``.
+
     Returns (dL/dz0, dL/dargs).
     """
+    interp = ckpts.ev_lo is not None
 
     def local_step(t_i, h_i, z_i, a):
         # one ψ with the SAVED stepsize; k0 recomputed so its gradient flows
@@ -158,6 +217,7 @@ def _aca_backward_sweep_segmented(
 
     lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))
     gargs0 = jax.tree.map(jnp.zeros_like, args)
+    karr = jnp.arange(jax.tree.leaves(g_ys)[0].shape[0])
     # the O(seg_len) replay buffer — the N_f/K term of the cost model
     zbuf0 = jax.tree.map(
         lambda b: jnp.zeros((seg_len,) + b.shape[1:], b.dtype), ckpts.z)
@@ -208,9 +268,17 @@ def _aca_backward_sweep_segmented(
                 return jax.tree.map(jnp.add, lam, g_k)
 
             lam = jax.lax.cond(oi >= 0, add_out, lambda l: l, lam)
-            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
-                                z_i, args)
-            dlam, dargs = vjp_fn(lam)
+            if interp:
+                mask = (karr >= ckpts.ev_lo[i]) & (karr < ckpts.ev_hi[i])
+                _, vjp_fn = jax.vjp(
+                    lambda z, a: _local_step_dense(tab, f, t_i, h_i, z,
+                                                   a, ts, use_pallas),
+                    z_i, args)
+                dlam, dargs = vjp_fn((lam, _mask_cotangents(g_ys, mask)))
+            else:
+                _, vjp_fn = jax.vjp(
+                    lambda z, a: local_step(t_i, h_i, z, a), z_i, args)
+                dlam, dargs = vjp_fn(lam)
             gargs = jax.tree.map(jnp.add, gargs, dargs)
             return (dlam, gargs)
 
@@ -222,6 +290,27 @@ def _aca_backward_sweep_segmented(
     return lam, gargs
 
 
+def _local_step_dense_batched(tab, f, t_i, h_i, z_i, a, ts, use_pallas):
+    """Batched twin of ``_local_step_dense``: per-row saved stepsizes,
+    returns (z_next (B, ...), y_all (n_eval, B, ...)).  Frozen rows
+    (h = 0) produce finite garbage interpolants whose cotangents the
+    caller masks to zero."""
+    targs = _as_tuple(a)
+    res = rk_step_batched(tab, f, t_i, z_i, h_i, targs,
+                          use_pallas=use_pallas, dense=True)
+    if tab.fsal:
+        k1 = res.k_last
+    else:
+        k1 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))(t_i + h_i,
+                                                        res.z_next)
+    coeffs = interp_fit(z_i, res.z_next, res.k_first, k1, h_i, res.z_mid)
+    tiny = jnp.asarray(jnp.finfo(ts.dtype).eps, ts.dtype)
+    theta = jnp.clip(
+        (ts[:, None] - t_i[None, :])
+        / jnp.maximum(h_i, tiny)[None, :], 0.0, 1.0)    # (n_eval, B)
+    return res.z_next, interp_eval(coeffs, theta)
+
+
 def _aca_backward_sweep_batched(
     tab: Tableau,
     f: Callable,
@@ -230,6 +319,7 @@ def _aca_backward_sweep_batched(
     g_ys: PyTree,
     n_steps,
     use_pallas: bool = False,
+    ts: Optional[jnp.ndarray] = None,
 ):
     """Per-element reverse sweep: each batch element replays *its own*
     accepted checkpoint grid.
@@ -242,9 +332,15 @@ def _aca_backward_sweep_batched(
     cotangent to args), so short trajectories finish early without
     touching their λ.  Returns (dL/dz0 (B, ...), dL/dargs summed over
     the batch — args are shared).
+
+    Natural-grid checkpoints (``ckpts.ev_lo`` present; requires ``ts``)
+    route interpolated-output cotangents through each element's rebuilt
+    per-interval interpolant, masked to that element's recorded
+    [ev_lo, ev_hi) eval range.
     """
     B = n_steps.shape[0]
     rows = jnp.arange(B)
+    interp = ckpts.ev_lo is not None
 
     def local_step(t_i, h_i, z_i, a):
         # one batched ψ with each element's SAVED stepsize (no search);
@@ -255,6 +351,7 @@ def _aca_backward_sweep_batched(
     lam0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))  # (B, ...)
     gargs0 = jax.tree.map(jnp.zeros_like, args)
     n_max = jnp.max(n_steps)
+    karr = jnp.arange(jax.tree.leaves(g_ys)[0].shape[0])
 
     def body(j, carry):
         lam, gargs = carry
@@ -278,9 +375,18 @@ def _aca_backward_sweep_batched(
 
         # batched local forward + local backward; frozen rows are the
         # identity, so dlam == lam and dargs == 0 for them exactly
-        _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a), z_i,
-                            args)
-        dlam, dargs = vjp_fn(lam)
+        if interp:
+            mask = (live[None, :]
+                    & (karr[:, None] >= ckpts.ev_lo[rows, i_c][None, :])
+                    & (karr[:, None] < ckpts.ev_hi[rows, i_c][None, :]))
+            _, vjp_fn = jax.vjp(
+                lambda z, a: _local_step_dense_batched(
+                    tab, f, t_i, h_i, z, a, ts, use_pallas), z_i, args)
+            dlam, dargs = vjp_fn((lam, _mask_cotangents(g_ys, mask)))
+        else:
+            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
+                                z_i, args)
+            dlam, dargs = vjp_fn(lam)
         gargs = jax.tree.map(jnp.add, gargs, dargs)
         return (dlam, gargs)
 
@@ -299,6 +405,7 @@ def _aca_backward_sweep_segmented_batched(
     n_steps,
     seg_len: int,
     use_pallas: bool = False,
+    ts: Optional[jnp.ndarray] = None,
 ):
     """Batched segmented reverse sweep (``checkpoint_segments`` +
     ``batch_axis``).
@@ -317,6 +424,10 @@ def _aca_backward_sweep_segmented_batched(
     state memory O(B · (K + seg_len)); the re-integration costs at most
     2 ψ per accepted step.
 
+    Natural-grid checkpoints (``ckpts.ev_lo`` present; requires ``ts``)
+    route interpolated-output cotangents through each element's rebuilt
+    per-interval interpolant, as in ``_aca_backward_sweep_batched``.
+
     Returns (dL/dz0 (B, ...), dL/dargs summed over the batch).
     """
     B = n_steps.shape[0]
@@ -324,6 +435,8 @@ def _aca_backward_sweep_segmented_batched(
     S = ckpts.t.shape[1]
     n_snap = jax.tree.leaves(ckpts.z)[0].shape[1]
     hdt = ckpts.h.dtype
+    interp = ckpts.ev_lo is not None
+    karr = jnp.arange(jax.tree.leaves(g_ys)[0].shape[0])
 
     def local_step(t_i, h_i, z_i, a):
         # one batched ψ with each element's SAVED stepsize (no search);
@@ -399,9 +512,21 @@ def _aca_backward_sweep_segmented_batched(
                     g[oi_c, rows], jnp.zeros_like(l)),
                 lam, g_ys)
 
-            _, vjp_fn = jax.vjp(lambda z, a: local_step(t_i, h_i, z, a),
-                                z_i, args)
-            dlam, dargs = vjp_fn(lam)
+            if interp:
+                mask = (live[None, :]
+                        & (karr[:, None]
+                           >= ckpts.ev_lo[rows, i_c][None, :])
+                        & (karr[:, None]
+                           < ckpts.ev_hi[rows, i_c][None, :]))
+                _, vjp_fn = jax.vjp(
+                    lambda z, a: _local_step_dense_batched(
+                        tab, f, t_i, h_i, z, a, ts, use_pallas),
+                    z_i, args)
+                dlam, dargs = vjp_fn((lam, _mask_cotangents(g_ys, mask)))
+            else:
+                _, vjp_fn = jax.vjp(
+                    lambda z, a: local_step(t_i, h_i, z, a), z_i, args)
+                dlam, dargs = vjp_fn(lam)
             # all-frozen trailing iterations leave gargs bit-untouched
             any_live = jnp.any(live)
             gargs = jax.tree.map(
@@ -428,6 +553,7 @@ def odeint_aca_batched(
     cfg: Optional[ControllerConfig] = None,
     use_pallas: bool = False,
     checkpoint_segments=None,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched ACA: ``odeint(..., batch_axis=0)``'s adaptive
     ACA path.
@@ -445,6 +571,11 @@ def odeint_aca_batched(
     state memory to K snapshots + one seg_len replay buffer; the
     end-aligned segmented sweep keeps gradients bit-identical to the
     full buffer (see ``_aca_backward_sweep_segmented_batched``).
+
+    ``interpolate_ts`` advances every element on its own natural grid
+    and reads interior eval times off per-step interpolants; the
+    backward sweeps route those outputs' cotangents through the rebuilt
+    interpolants (see ``odeint_aca``).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -461,13 +592,15 @@ def odeint_aca_batched(
     def solve(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, checkpoint_segments=n_seg)
+            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, checkpoint_segments=n_seg)
+            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            interpolate_ts=interpolate_ts)
         return (ys, stats), (ckpts, args, ts)
 
     def solve_bwd(res, cot):
@@ -476,11 +609,11 @@ def odeint_aca_batched(
         if n_seg is None:
             dz0, dargs = _aca_backward_sweep_batched(
                 solver, f, ckpts, args, g_ys, ckpts.n,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, ts=ts)
         else:
             dz0, dargs = _aca_backward_sweep_segmented_batched(
                 solver, f, ckpts, args, g_ys, ckpts.n, seg_len,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, ts=ts)
         return dz0, dargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)
@@ -503,6 +636,7 @@ def odeint_aca(
     h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     checkpoint_segments=None,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Solve dz/dt = f(t, z, *args) with ACA gradients.
 
@@ -521,6 +655,14 @@ def odeint_aca(
     snapshot with the saved stepsizes before replaying it — gradients
     are bit-identical to the full buffer at ~1 extra ψ per step (see
     ``docs/memory.md``).
+
+    ``interpolate_ts`` advances on the controller's natural grid and
+    reads interior eval times off each accepted step's interpolant
+    (``stepper.interp_fit``) instead of forcing step landings; the
+    backward sweep replays each interval *and* its interpolant, so the
+    gradient is still the exact discretize-then-optimize gradient of
+    the interpolated solution map.  ``ys[0]``/``ys[-1]`` remain exact
+    solver states.
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -541,13 +683,15 @@ def odeint_aca(
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
-            use_pallas=use_pallas, checkpoint_segments=n_seg)
+            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
-            use_pallas=use_pallas, checkpoint_segments=n_seg)
+            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            interpolate_ts=interpolate_ts)
         return (ys, stats), (ckpts, args, ts)
 
     def solve_bwd(res, cot):
@@ -556,11 +700,11 @@ def odeint_aca(
         if n_seg is None:
             dz0, dargs = _aca_backward_sweep(
                 solver, f, ckpts, args, g_ys, ckpts.n,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, ts=ts)
         else:
             dz0, dargs = _aca_backward_sweep_segmented(
                 solver, f, ckpts, args, g_ys, ckpts.n, seg_len,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, ts=ts)
         return dz0, dargs, jnp.zeros_like(ts)
 
     solve.defvjp(solve_fwd, solve_bwd)
@@ -654,7 +798,3 @@ def odeint_aca_fixed(
     if unravel is not None:
         ys = jax.vmap(unravel)(ys)
     return ys, stats
-
-
-def _as_tuple(args) -> Tuple:
-    return args if isinstance(args, tuple) else (args,)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from .controller import ControllerConfig
 from .integrate import (
     SolveStats,
+    _as_tuple,
     adaptive_while_solve,
     batched_adaptive_while_solve,
     fixed_grid_solve,
@@ -33,10 +34,6 @@ from .stepper import flatten_problem, maybe_flatten, maybe_flatten_batched
 from .tableaus import Tableau
 
 PyTree = Any
-
-
-def _as_tuple(args) -> Tuple:
-    return args if isinstance(args, tuple) else (args,)
 
 
 def _solve_segment_adaptive(solver, g, aug, s_seg, args, rtol, atol, cfg,
@@ -86,12 +83,20 @@ def odeint_adjoint(
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
     use_pallas: bool = False,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Adjoint-method odeint: O(N_f) memory, reverse-time numerical error.
 
     ``use_pallas`` runs the forward solve on the raveled state and each
     backward segment on the raveled augmented (z̄, λ, ḡ) state, both
     through the fused flat-state kernels.
+
+    ``interpolate_ts`` makes the *forward* solve advance on its natural
+    grid and read interior eval times off per-step interpolants; the
+    backward pass is untouched — it re-integrates the augmented system
+    from z(T) and injects the output cotangents at each ``ts[k]``
+    exactly as before (the continuous-adjoint approximation already
+    treats ``g_ys[k]`` as the cotangent of z(ts[k])).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -114,13 +119,13 @@ def odeint_adjoint(
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         # residuals: ONLY the eval-time states (z(T) et al.) — O(N_f) memory
         return (ys, stats), (ys, args, ts)
 
@@ -183,6 +188,7 @@ def odeint_adjoint_batched(
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
     use_pallas: bool = False,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched adjoint: ``odeint(..., batch_axis=0)``'s
     adjoint path.
@@ -193,6 +199,8 @@ def odeint_adjoint_batched(
     the same masked batched engine; ḡ is carried per element and summed
     over the batch at the end (args are shared).  Returns (ys, stats)
     with ys leaves (len(ts), B, ...) and per-element stats.
+    ``interpolate_ts`` affects only the forward solve (see
+    ``odeint_adjoint``).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -207,13 +215,13 @@ def odeint_adjoint_batched(
     def solve(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         # residuals: ONLY the eval-time states — O(N_f) memory per element
         return (ys, stats), (ys, args, ts)
 

@@ -24,10 +24,13 @@ import jax.numpy as jnp
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
 from .integrate import (
     SolveStats,
+    _as_tuple,
     _buffer_set,
     _bwhere,
     _empty_buffer,
     fixed_grid_solve,
+    natural_grid_outputs,
+    natural_grid_outputs_batched,
 )
 from .stepper import (
     error_ratio,
@@ -39,10 +42,6 @@ from .stepper import (
 from .tableaus import Tableau
 
 PyTree = Any
-
-
-def _as_tuple(args) -> Tuple:
-    return args if isinstance(args, tuple) else (args,)
 
 
 def odeint_naive(
@@ -57,6 +56,7 @@ def odeint_naive(
     cfg: Optional[ControllerConfig] = None,
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Differentiable adaptive solve (naive method).
 
@@ -67,6 +67,12 @@ def odeint_naive(
     the fused flat-state kernels over the raveled state; reverse-mode AD
     goes through their custom_vjp, including the stepsize chain via the
     fused ``ratio``.
+
+    ``interpolate_ts`` advances on the controller's natural grid and
+    reads interior eval times off per-step interpolants; the
+    interpolation arithmetic sits on the tape like everything else, so
+    reverse-mode AD differentiates through it (including θ's dependence
+    on the stepsize chain — everything stays on the naive tape).
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -83,6 +89,7 @@ def odeint_naive(
         cfg.max_steps * cfg.max_trials)
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
     targs = _as_tuple(args)
+    karr = jnp.arange(n_eval)
 
     h_init = initial_stepsize(f, ts[0], z0, targs, solver.order, rtol, atol)
 
@@ -101,14 +108,26 @@ def odeint_naive(
     def body(c, _):
         done = c["eval_idx"] >= n_eval
         t, z, h = c["t"], c["z"], c["h"]
-        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
+        t_target = ts[n_eval - 1] if interpolate_ts else \
+            ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
         h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
-        h_use = jnp.clip(h, h_min, jnp.maximum(t_target - t, h_min))
+        # done elements keep taking discarded sliver trials, but the
+        # sliver is pinned to FLOAT32 eps regardless of the time dtype:
+        # an ~eps(float64) step puts ratios of order eps/tol on the
+        # tape, whose pow/sqrt jacobians overflow f32 and fuse into NaN
+        # (a full-size h would instead evaluate f past ts[-1], where the
+        # field may be singular).  In f32 time this is exactly h_min.
+        h_done = 16.0 * jnp.asarray(jnp.finfo(jnp.float32).eps, tdt) \
+            * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        h_use = jnp.where(done, h_done,
+                          jnp.clip(h, h_min,
+                                   jnp.maximum(t_target - t, h_min)))
 
         # NOTE: no k0 caching here — the naive method re-records the whole
         # trial in the graph, including the first stage.
         res = rk_step(solver, f, t, z, h_use, targs,
-                      use_pallas=use_pallas, err_scale=(rtol, atol))
+                      use_pallas=use_pallas, err_scale=(rtol, atol),
+                      dense=interpolate_ts)
         ratio = res.err_ratio if res.err_ratio is not None else \
             error_ratio(res.err, z, res.z_next, rtol, atol)
         accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
@@ -117,15 +136,32 @@ def odeint_naive(
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
             jnp.abs(t_target), jnp.asarray(1.0, tdt)))
 
-        ys = jax.tree.map(
-            lambda b, v: b.at[c["eval_idx"]].set(
-                jnp.where(hit, v, b[jnp.minimum(c["eval_idx"],
-                                                n_eval - 1)])),
-            c["ys"], res.z_next)
+        if interpolate_ts:
+            # interior eval times read off this trial's interpolant —
+            # all on the tape, like everything else in the naive method
+            k1 = res.k_last if solver.fsal else \
+                f(t_new, res.z_next, *targs)
+            ys, _, _, eval_advance = natural_grid_outputs(
+                ts, karr, tiny, t, t_new, h_use, accept, hit,
+                c["eval_idx"], c["ys"], z, res.z_next, res.k_first,
+                k1, res.z_mid)
+        else:
+            ys = jax.tree.map(
+                lambda b, v: b.at[c["eval_idx"]].set(
+                    jnp.where(hit, v, b[jnp.minimum(c["eval_idx"],
+                                                    n_eval - 1)])),
+                c["ys"], res.z_next)
+            eval_advance = hit.astype(jnp.int32)
 
         # differentiable stepsize chain: gradient flows through `ratio`
-        # into h_next — the redundant graph the paper criticizes.
-        h_next = propose_stepsize(cfg, h_use, ratio, c["prev_ratio"],
+        # into h_next — the redundant graph the paper criticizes.  A
+        # done element's h_next is discarded by the where below, but its
+        # post-done h_min trials produce ratios ~eps(tdt)/tol whose
+        # ratio^(-1/p) jacobian overflows f32 under x64 time grids and
+        # XLA fusion can turn the masked inf into NaN — feed the
+        # discarded computation a neutral ratio instead
+        ratio_h = jnp.where(done, jnp.ones_like(ratio), ratio)
+        h_next = propose_stepsize(cfg, h_use, ratio_h, c["prev_ratio"],
                                   solver.order).astype(tdt)
 
         c_new = dict(
@@ -135,7 +171,7 @@ def odeint_naive(
             h=jnp.where(done, h, h_next),
             prev_ratio=jnp.where(accept, jnp.maximum(ratio, 1e-10),
                                  c["prev_ratio"]),
-            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + eval_advance,
             n_acc=c["n_acc"] + accept.astype(jnp.int32),
             ys=ys,
         )
@@ -144,10 +180,13 @@ def odeint_naive(
     c, _ = jax.lax.scan(body, carry0, None, length=budget)
     ys_out = c["ys"] if unravel is None else jax.vmap(unravel)(c["ys"])
 
+    # interpolate mode on a non-FSAL pair pays one extra k1 eval/trial
+    evals_per_trial = solver.stages + (
+        1 if interpolate_ts and not solver.fsal else 0)
     stats = SolveStats(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
         n_trials=jnp.asarray(budget, jnp.int32),
-        nfe=jnp.asarray(budget * solver.stages, jnp.int32),
+        nfe=jnp.asarray(budget * evals_per_trial, jnp.int32),
         overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
     )
     return ys_out, stats
@@ -165,6 +204,7 @@ def odeint_naive_batched(
     cfg: Optional[ControllerConfig] = None,
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
+    interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched naive method: ``odeint(..., batch_axis=0)``
     with direct backprop through the masked solver scan.
@@ -179,6 +219,7 @@ def odeint_naive_batched(
     including the per-element stepsize-search graph the paper
     criticizes.  ``trial_budget`` bounds the scan length (shared across
     elements); defaults to cfg.max_steps * cfg.max_trials.
+    ``interpolate_ts`` as in ``odeint_naive``, per element.
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -212,20 +253,29 @@ def odeint_naive_batched(
         ys=ys0,
     )
 
+    karr = jnp.arange(n_eval)
+
     def body(c, _):
         done = c["eval_idx"] >= n_eval                      # (B,)
         t, z, h = c["t"], c["z"], c["h"]
-        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
+        t_target = ts[n_eval - 1] if interpolate_ts else \
+            ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
         h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
-        # done elements keep stepping with h_min (their carry is frozen by
-        # the where-masks below) rather than h = 0: a zero step has zero
-        # error, and backprop through sqrt(0) in the error norm is NaN
-        h_use = jnp.clip(h, h_min, jnp.maximum(t_target - t, h_min))
+        # done elements keep taking discarded float32-eps sliver trials
+        # (see odeint_naive): h = 0 would put sqrt(0) on the tape, an
+        # ~eps(float64) sliver's ratio jacobian overflows f32, and a
+        # full-size h would evaluate f past each element's ts[-1]
+        h_done = 16.0 * jnp.asarray(jnp.finfo(jnp.float32).eps, tdt) \
+            * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        h_use = jnp.where(done, h_done,
+                          jnp.clip(h, h_min,
+                                   jnp.maximum(t_target - t, h_min)))
 
         # NOTE: no k0 caching here — the naive method re-records the whole
         # trial in the graph, including the first stage (per element).
         res = rk_step_batched(solver, f, t, z, h_use, targs,
-                              use_pallas=use_pallas, err_scale=(rtol, atol))
+                              use_pallas=use_pallas, err_scale=(rtol, atol),
+                              dense=interpolate_ts)
         ratio = res.err_ratio                               # (B,)
         accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
 
@@ -233,14 +283,33 @@ def odeint_naive_batched(
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
             jnp.abs(t_target), jnp.asarray(1.0, tdt)))
 
-        e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
-        ys = jax.tree.map(
-            lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
-            c["ys"], res.z_next)
+        if interpolate_ts:
+            # per-element interior reads off each row's interpolant (all
+            # on the tape); ts[-1] stays an exact landing per element
+            if solver.fsal:
+                k1 = res.k_last
+            else:
+                k1 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))(
+                    t_new, res.z_next)
+            ys, _, _, eval_advance = natural_grid_outputs_batched(
+                ts, karr, tiny, rows, t, t_new, h_use, accept, hit,
+                c["eval_idx"], c["ys"], z, res.z_next, res.k_first,
+                k1, res.z_mid)
+        else:
+            e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
+            ys = jax.tree.map(
+                lambda b, v: b.at[e_c, rows].set(
+                    _bwhere(hit, v, b[e_c, rows])),
+                c["ys"], res.z_next)
+            eval_advance = hit.astype(jnp.int32)
 
         # differentiable per-element stepsize chain: gradient flows
-        # through each element's own `ratio` into its h_next.
-        h_next = propose_stepsize(cfg, h_use, ratio, c["prev_ratio"],
+        # through each element's own `ratio` into its h_next.  done
+        # rows get a neutral ratio (see odeint_naive: their h_next is
+        # discarded, and the h_min-trial ratio's pow jacobian would
+        # overflow f32 under x64 time grids)
+        ratio_h = jnp.where(done, jnp.ones_like(ratio), ratio)
+        h_next = propose_stepsize(cfg, h_use, ratio_h, c["prev_ratio"],
                                   solver.order).astype(tdt)
 
         c_new = dict(
@@ -249,7 +318,7 @@ def odeint_naive_batched(
             h=jnp.where(done, h, h_next),
             prev_ratio=jnp.where(accept, jnp.maximum(ratio, 1e-10),
                                  c["prev_ratio"]),
-            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + eval_advance,
             n_acc=c["n_acc"] + accept.astype(jnp.int32),
             ys=ys,
         )
@@ -259,10 +328,12 @@ def odeint_naive_batched(
     ys_out = c["ys"] if unravel is None else \
         jax.vmap(jax.vmap(unravel))(c["ys"])
 
+    evals_per_trial = solver.stages + (
+        1 if interpolate_ts and not solver.fsal else 0)
     stats = SolveStats(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
         n_trials=jnp.full((B,), budget, jnp.int32),
-        nfe=jnp.full((B,), budget * solver.stages, jnp.int32),
+        nfe=jnp.full((B,), budget * evals_per_trial, jnp.int32),
         overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
     )
     return ys_out, stats

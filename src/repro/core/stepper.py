@@ -79,6 +79,12 @@ class StepResult(NamedTuple):
     # scaled error norm from the fused kernel (flat fast path with
     # err_scale only); None -> caller computes error_ratio itself
     err_ratio: Optional[jnp.ndarray] = None
+    # dense-output extras (``dense=True`` only): the first-stage
+    # derivative actually used (k0 input or freshly computed) and — for
+    # tableaus carrying ``b_mid`` — the step-midpoint solution
+    # z + h·Σ b_mid_i k_i.  Feed ``interp_fit``.
+    k_first: Optional[PyTree] = None
+    z_mid: Optional[PyTree] = None
 
 
 def _is_flat_array(z: PyTree) -> bool:
@@ -137,6 +143,7 @@ def _rk_step_flat(
     args: Tuple,
     k0: Optional[jnp.ndarray],
     err_scale: Optional[Tuple[float, float]],
+    dense: bool = False,
 ) -> StepResult:
     """Fused-kernel ψ over a flat (N,) state (see module docstring)."""
     # deferred: importing repro.kernels at module scope would cycle
@@ -165,8 +172,14 @@ def _rk_step_flat(
         z_next = ops.rk_stage_increment(z, ks, h, tab.b)
         err = None
     k_last = ks[-1] if tab.fsal else ks[0]
+    k_first = z_mid = None
+    if dense:
+        k_first = k0v
+        if tab.b_mid is not None:
+            # the midpoint combine is the increment kernel with b_mid
+            z_mid = ops.rk_stage_increment(z, ks, h, tab.b_mid)
     return StepResult(z_next=z_next, err=err, k_last=k_last,
-                      err_ratio=ratio)
+                      err_ratio=ratio, k_first=k_first, z_mid=z_mid)
 
 
 def rk_step(
@@ -180,6 +193,7 @@ def rk_step(
     *,
     use_pallas: bool = False,
     err_scale: Optional[Tuple[float, float]] = None,
+    dense: bool = False,
 ) -> StepResult:
     """One explicit RK step of ``tab`` from (t, z) with stepsize h.
 
@@ -194,9 +208,16 @@ def rk_step(
     ``StepResult.err_ratio``; *without* err_scale the fused path returns
     ``err=None`` even for embedded tableaus (the err buffer is not
     materialized — adaptive callers always pass err_scale).
+
+    ``dense=True`` additionally returns the dense-output inputs of
+    ``interp_fit``: ``k_first`` (the stage-0 derivative this step
+    consumed) and, for tableaus with ``b_mid``, the midpoint solution
+    ``z_mid = z + h·Σ b_mid_i k_i``.  The advancing arithmetic is
+    untouched — z_next is bit-identical with and without ``dense``.
     """
     if use_pallas and _is_flat_array(z):
-        return _rk_step_flat(tab, f, t, z, h, args, k0, err_scale)
+        return _rk_step_flat(tab, f, t, z, h, args, k0, err_scale,
+                             dense=dense)
     ks = []
     for i in range(tab.stages):
         if i == 0:
@@ -219,7 +240,13 @@ def rk_step(
         k_last = ks[-1]
     else:
         k_last = ks[0]
-    return StepResult(z_next=z_next, err=err, k_last=k_last)
+    k_first = z_mid = None
+    if dense:
+        k_first = ks[0]
+        if tab.b_mid is not None:
+            z_mid = _tree_axpy(h, _weighted_sum(ks, tab.b_mid), z)
+    return StepResult(z_next=z_next, err=err, k_last=k_last,
+                      k_first=k_first, z_mid=z_mid)
 
 
 def _is_flat_batched(z: PyTree) -> bool:
@@ -264,6 +291,7 @@ def _rk_step_flat_batched(
     h: jnp.ndarray,
     k0: Optional[jnp.ndarray],
     err_scale: Optional[Tuple[float, float]],
+    dense: bool = False,
 ) -> StepResult:
     """Fused batched ψ over a (B, N) state: per-row stepsizes, per-row
     error norms.  ``fb`` maps ((B,), (B, N)) -> (B, N)."""
@@ -286,8 +314,13 @@ def _rk_step_flat_batched(
         z_next = ops.rk_stage_increment_batched(z, ks, h, tab.b)
         err = None
     k_last = ks[-1] if tab.fsal else ks[0]
+    k_first = z_mid = None
+    if dense:
+        k_first = k0v
+        if tab.b_mid is not None:
+            z_mid = ops.rk_stage_increment_batched(z, ks, h, tab.b_mid)
     return StepResult(z_next=z_next, err=err, k_last=k_last,
-                      err_ratio=ratio)
+                      err_ratio=ratio, k_first=k_first, z_mid=z_mid)
 
 
 def rk_step_batched(
@@ -301,6 +334,7 @@ def rk_step_batched(
     *,
     use_pallas: bool = False,
     err_scale: Optional[Tuple[float, float]] = None,
+    dense: bool = False,
 ) -> StepResult:
     """One explicit RK step per batch element: ψ_{h_b}(t_b, z_b) for all
     b at once.
@@ -315,10 +349,12 @@ def rk_step_batched(
 
     ``use_pallas=True`` dispatches (B, N) inexact states to the batched
     fused kernels; other states take the vmapped pytree path.
+    ``dense=True`` as in ``rk_step`` (per-row ``k_first`` / ``z_mid``).
     """
     fb = jax.vmap(lambda ti, zi: f(ti, zi, *args))
     if use_pallas and _is_flat_batched(z):
-        return _rk_step_flat_batched(tab, fb, t, z, h, k0, err_scale)
+        return _rk_step_flat_batched(tab, fb, t, z, h, k0, err_scale,
+                                     dense=dense)
 
     ks = []
     for i in range(tab.stages):
@@ -347,8 +383,13 @@ def rk_step_batched(
             err = None
 
     k_last = ks[-1] if tab.fsal else ks[0]
+    k_first = z_mid = None
+    if dense:
+        k_first = ks[0]
+        if tab.b_mid is not None:
+            z_mid = _tree_baxpy(h, _weighted_sum(ks, tab.b_mid), z)
     return StepResult(z_next=z_next, err=err, k_last=k_last,
-                      err_ratio=ratio)
+                      err_ratio=ratio, k_first=k_first, z_mid=z_mid)
 
 
 def error_ratio(err: PyTree, z0: PyTree, z1: PyTree, rtol: float,
@@ -370,6 +411,110 @@ def error_ratio(err: PyTree, z0: PyTree, z1: PyTree, rtol: float,
     total = sum(leaves_sq)
     n = sum(sizes)
     return jnp.sqrt(total / n)
+
+
+# --------------------------------------------------------------------------
+# Dense output: per-step polynomial interpolants
+# --------------------------------------------------------------------------
+#
+# Every accepted step carries enough information for a local polynomial
+# z(t + θh) ≈ P(θ), θ ∈ [0, 1], built from quantities the solver loop
+# already computed:
+#
+#   * cubic Hermite (any tableau): endpoints z0, z1 and endpoint
+#     derivatives k0 = f(t, z0), k1 = f(t+h, z1) — both free: k0 is the
+#     first stage, k1 is the FSAL last stage (or the post-accept k0'
+#     recompute for non-FSAL pairs).  Local error O(h⁴).
+#   * quartic fit (tableaus with ``b_mid``, i.e. Dopri5): adds the
+#     midpoint solution z_mid = z0 + h·Σ b_mid_i k_i, giving the classic
+#     4th-order dense output whose error tracks the pair's tolerance.
+#
+# Both are expressed as one coefficient 5-tuple (c4..c0) with
+# P(θ) = (((c4·θ + c3)·θ + c2)·θ + c1)·θ + c0, so downstream code
+# (interpolated eval-time reads, DenseSolution storage, the ACA backward
+# sweep's interpolated-output vjp) handles one representation.  P(0) is
+# z0 *bitwise* (c0 = z0); P(1) recovers z1 algebraically.
+
+
+class InterpCoeffs(NamedTuple):
+    """Polynomial coefficients of one step interpolant (pytrees, highest
+    degree first): P(θ) = c4·θ⁴ + c3·θ³ + c2·θ² + c1·θ + c0."""
+    c4: PyTree
+    c3: PyTree
+    c2: PyTree
+    c1: PyTree
+    c0: PyTree
+
+
+def _hb(h, leaf):
+    """Reshape h (scalar or (B,)) to broadcast against a state leaf,
+    cast to the leaf dtype (a float64 time grid under JAX_ENABLE_X64
+    must not upcast a float32 state — same rule as ``_tree_axpy``)."""
+    h = jnp.asarray(h, leaf.dtype)
+    return h.reshape(h.shape + (1,) * (leaf.ndim - h.ndim))
+
+
+def interp_fit(z0: PyTree, z1: PyTree, k0: PyTree, k1: PyTree, h,
+               z_mid: Optional[PyTree] = None) -> InterpCoeffs:
+    """Fit the step interpolant from endpoint (and midpoint) data.
+
+    ``h`` is the accepted stepsize — a scalar, or (B,) for batch-leading
+    pytrees (per-row steps).  With ``z_mid`` (tableaus carrying
+    ``b_mid``) this is the 4th-order quartic fit matching z0, z1, z_mid,
+    k0 and k1; without it, the cubic Hermite through z0, z1, k0, k1
+    (c4 = 0).  All arithmetic is plain jnp — differentiable everywhere,
+    including under the ACA backward sweep's local vjp.
+    """
+    # h·k cast to the STATE leaf dtype (not k's): under x64 a float64
+    # time can promote f's output, and the coefficients must match z —
+    # the _tree_axpy convention
+    hk0 = jax.tree.map(lambda k, z: (_hb(h, z) * k).astype(z.dtype),
+                       k0, z0)
+    hk1 = jax.tree.map(lambda k, z: (_hb(h, z) * k).astype(z.dtype),
+                       k1, z0)
+    if z_mid is None:
+        c4 = jax.tree.map(jnp.zeros_like, z0)
+        c3 = jax.tree.map(
+            lambda a, b, p, q: 2.0 * (a - b) + p + q, z0, z1, hk0, hk1)
+        c2 = jax.tree.map(
+            lambda a, b, p, q: 3.0 * (b - a) - 2.0 * p - q,
+            z0, z1, hk0, hk1)
+    else:
+        c4 = jax.tree.map(
+            lambda p, q, a, b, m: 2.0 * (q - p) - 8.0 * (a + b)
+            + 16.0 * m, hk0, hk1, z0, z1, z_mid)
+        c3 = jax.tree.map(
+            lambda p, q, a, b, m: 5.0 * p - 3.0 * q + 18.0 * a
+            + 14.0 * b - 32.0 * m, hk0, hk1, z0, z1, z_mid)
+        c2 = jax.tree.map(
+            lambda p, q, a, b, m: q - 4.0 * p - 11.0 * a - 5.0 * b
+            + 16.0 * m, hk0, hk1, z0, z1, z_mid)
+    return InterpCoeffs(c4=c4, c3=c3, c2=c2, c1=hk0, c0=z0)
+
+
+def interp_eval(coeffs: InterpCoeffs, theta: jnp.ndarray) -> PyTree:
+    """Evaluate P at ``theta``, stacking theta's *leading* axis onto the
+    output: theta (T,) over solo leaves (...) -> (T, ...); theta (T, B)
+    over batch-leading leaves (B, ...) -> (T, B, ...)."""
+    def ev(c4, c3, c2, c1, c0):
+        th = theta.astype(c0.dtype).reshape(
+            theta.shape + (1,) * (c0.ndim - (theta.ndim - 1)))
+        return (((c4 * th + c3) * th + c2) * th + c1) * th + c0
+
+    return jax.tree.map(ev, *coeffs)
+
+
+def interp_eval_aligned(coeffs: InterpCoeffs,
+                        theta: jnp.ndarray) -> PyTree:
+    """Evaluate P elementwise: theta's axes align with the *leading*
+    leaf axes (theta (T,) over leaves (T, ...) -> (T, ...)).  Used by
+    ``DenseSolution.evaluate`` after gathering per-query coefficients."""
+    def ev(c4, c3, c2, c1, c0):
+        th = theta.astype(c0.dtype).reshape(
+            theta.shape + (1,) * (c0.ndim - theta.ndim))
+        return (((c4 * th + c3) * th + c2) * th + c1) * th + c0
+
+    return jax.tree.map(ev, *coeffs)
 
 
 def fixed_step_fn(tab: Tableau, f: VecField) -> Callable:

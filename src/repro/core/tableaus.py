@@ -15,6 +15,14 @@ A tableau of an ``s``-stage method holds
   * ``order`` — the order p used by the stepsize controller exponent,
   * ``fsal`` — first-same-as-last: stage 0 of the next step equals the last
     stage of the accepted step (Dopri5, BS23), saving one f-evaluation.
+  * ``b_mid`` — optional dense-output weights: ``z(t + h/2) ≈ z + h·Σ
+    b_mid_i k_i`` evaluates the solution at the step midpoint from the
+    already-computed stages (Dopri5 ships the classic Shampine
+    coefficients).  The midpoint upgrades the step interpolant from the
+    free cubic Hermite (z, f at both endpoints) to the 4th-order quartic
+    fit used by ``interpolate_ts`` / ``odeint_dense`` — see
+    ``stepper.interp_fit``.  Methods without ``b_mid`` interpolate with
+    the cubic Hermite, which already matches their order for p ≤ 3.
 """
 
 from __future__ import annotations
@@ -53,6 +61,7 @@ class Tableau:
     order: int
     b_err: Optional[Tuple[float, ...]] = None
     fsal: bool = False
+    b_mid: Optional[Tuple[float, ...]] = None
 
     @property
     def stages(self) -> int:
@@ -83,6 +92,11 @@ class Tableau:
         if self.b_err is not None:
             # embedded error weights must sum to zero (b and b_hat both sum to 1)
             assert abs(sum(self.b_err)) < 1e-12, f"{self.name}: sum(b_err) != 0"
+        if self.b_mid is not None:
+            assert len(self.b_mid) == s, f"{self.name}: b_mid wrong length"
+            # consistency (dz/dt = 1): z + h·Σ b_mid must land at t + h/2
+            assert abs(sum(self.b_mid) - 0.5) < 1e-12, (
+                f"{self.name}: sum(b_mid) != 1/2")
 
 
 # ----------------------------------------------------------------------------
@@ -186,6 +200,18 @@ DOPRI5 = Tableau(
     c=(0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0),
     order=5,
     fsal=True,
+    # Shampine's dense-output midpoint: z(t + h/2) = z + h·Σ b_mid_i k_i
+    # (the classic coefficients used by dopri5 dense output; feeds the
+    # 4th-order quartic fit of stepper.interp_fit)
+    b_mid=(
+        6025192743.0 / 30085553152.0 / 2.0,
+        0.0,
+        51252292925.0 / 65400821598.0 / 2.0,
+        -2691868925.0 / 45128329728.0 / 2.0,
+        187940372067.0 / 1594534317056.0 / 2.0,
+        -1776094331.0 / 19743644256.0 / 2.0,
+        11237099.0 / 235043384.0 / 2.0,
+    ),
 )
 
 

@@ -6,11 +6,11 @@ checkpointing — the fault-tolerance contract the train loop relies on.
 """
 
 from .synthetic import TokenPipeline, spiral_classification
-from .timeseries import irregular_series_batch
+from .timeseries import irregular_series_batch, merged_time_grid
 from .threebody import simulate_three_body, three_body_rhs
 
 __all__ = [
     "TokenPipeline", "spiral_classification",
-    "irregular_series_batch",
+    "irregular_series_batch", "merged_time_grid",
     "simulate_three_body", "three_body_rhs",
 ]

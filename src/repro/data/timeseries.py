@@ -47,6 +47,38 @@ def irregular_series_batch(batch: int, n_obs: int, obs_dim: int = 8,
     }
 
 
+def merged_time_grid(ts) -> Dict[str, jnp.ndarray]:
+    """Union eval grid over a batch of per-sample irregular time rows.
+
+    ``ts`` (B, T), rows sorted ascending (``irregular_series_batch``'s
+    layout).  Returns ``{"t_union": (M,), "idx": (B, T)}`` with
+    ``t_union`` the strictly-increasing union of every observation time
+    (duplicates removed — ``odeint`` rejects repeated eval times) and
+    ``t_union[idx[b, j]] == ts[b, j]``; dtype is the default float
+    (float64 under ``JAX_ENABLE_X64`` — no silent truncation).
+
+    This is the latent-ODE dense-output path: instead of one solve per
+    sample landing on its own T times, integrate the whole batch once
+    through ``t_union`` with ``odeint(..., batch_axis=0,
+    interpolate_ts=True)`` — M ≈ B·T eval points would inflate a
+    forced-landing solve's step count by ~B×, but on the natural grid
+    they are free interpolant reads — then gather sample b's outputs as
+    ``ys[idx[b], b]``.
+    """
+    # cast to the grid dtype BEFORE deduplicating: times whose gap is
+    # below that dtype's resolution must collapse into ONE knot here,
+    # not into a repeat after a later cast (odeint's monotonicity check
+    # rejects repeats).  The default float dtype keeps float64 inputs
+    # exact under JAX_ENABLE_X64 instead of truncating them.
+    tdt = np.dtype(jnp.result_type(float))
+    tsn = np.asarray(ts, tdt)
+    t_union, inv = np.unique(tsn.reshape(-1), return_inverse=True)
+    return {
+        "t_union": jnp.asarray(t_union, tdt),
+        "idx": jnp.asarray(inv.reshape(tsn.shape), jnp.int32),
+    }
+
+
 def _expm(a: np.ndarray) -> np.ndarray:
     """Scaling-and-squaring Padé-free matrix exponential (Taylor, scaled).
 

@@ -1,0 +1,256 @@
+"""Dense output: ``interpolate_ts`` natural-grid solving and
+``odeint_dense`` / ``DenseSolution``.
+
+Coverage matrix per the acceptance gate: gradcheck + compatibility for
+``interpolate_ts`` across {aca, adjoint, naive} × {pytree, pallas} ×
+{solo, batched}, plus the step-count reduction it exists for.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GRAD_METHODS, odeint, odeint_dense
+from repro.core.stepper import interp_eval, interp_fit, rk_step
+from repro.core.tableaus import BOGACKI_SHAMPINE, DOPRI5
+from repro.data import merged_time_grid
+
+
+@pytest.fixture
+def _interpret_kernels():
+    from repro.kernels import ops
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+# ----------------------------------------------------- interpolant unit
+
+def test_dopri5_b_mid_consistency():
+    assert DOPRI5.b_mid is not None
+    assert abs(sum(DOPRI5.b_mid) - 0.5) < 1e-12
+    DOPRI5.validate()
+
+
+@pytest.mark.parametrize("tab", [DOPRI5, BOGACKI_SHAMPINE])
+def test_interpolant_tracks_solution(tab):
+    """P(0) is z0 bitwise; P(θ) tracks the true solution to O(h⁴) on
+    one step of dz/dt = -z."""
+    f = lambda t, z: -z
+    z0 = jnp.ones((3,))
+    h = 0.25
+    res = rk_step(tab, f, 0.0, z0, h, dense=True)
+    k1 = res.k_last if tab.fsal else f(h, res.z_next)
+    co = interp_fit(z0, res.z_next, res.k_first, k1, h, res.z_mid)
+    th = jnp.linspace(0.0, 1.0, 11)
+    vals = np.asarray(interp_eval(co, th))
+    exact = np.exp(-h * np.asarray(th))[:, None] * np.ones(3)
+    np.testing.assert_array_equal(vals[0], np.asarray(z0))
+    # bound includes the step's own local error (bosh3 is order 3, so
+    # z_next itself sits ~1e-4 off at h = 0.25), not just interp error
+    assert np.abs(vals - exact).max() < 1e-3 * h
+
+
+# ----------------------------------------- natural grid: fewer steps
+
+def test_interpolate_ts_cuts_trials_on_dense_grid():
+    """The headline effect: 33 eval points no longer force 33 landings."""
+    ts = jnp.linspace(0.0, 3.0, 33)
+    kw = dict(solver="dopri5", grad_method="aca", rtol=1e-6, atol=1e-6)
+    ys0, st0 = odeint(lambda t, z: -0.7 * z, jnp.float32(2.0), ts, **kw)
+    ys1, st1 = odeint(lambda t, z: -0.7 * z, jnp.float32(2.0), ts,
+                      interpolate_ts=True, **kw)
+    assert int(st0.n_trials) >= 2 * int(st1.n_trials)
+    exact = 2.0 * np.exp(-0.7 * np.asarray(ts))
+    np.testing.assert_allclose(np.asarray(ys1), exact, atol=2e-5)
+    # endpoints stay exact solver states
+    assert float(ys1[0]) == 2.0
+
+
+# --------------------------------------------------------- gradients
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+def test_interpolated_multi_time_gradient_analytic(method):
+    """Cotangents of interpolated outputs flow correctly: dL/dz0 of
+    L = Σ_k z(t_k)² matches 2 z0 Σ e^{2 t_k} under every method."""
+    ts = jnp.linspace(0.0, 1.0, 9)
+
+    def loss(z0):
+        ys, _ = odeint(lambda t, z, k: k * z, z0, ts, (jnp.float32(1.0),),
+                       solver="dopri5", grad_method=method, rtol=1e-7,
+                       atol=1e-7, interpolate_ts=True)
+        return jnp.sum(ys ** 2)
+
+    z0 = jnp.float32(0.7)
+    g = float(jax.grad(loss)(z0))
+    analytic = 2 * 0.7 * float(np.sum(np.exp(2 * np.asarray(ts))))
+    assert abs(g - analytic) / analytic < 1e-3, (method, g, analytic)
+
+
+def _interp_case(method, use_pallas, batched, interpolate, **kw):
+    def f(t, z, w):
+        return jnp.tanh(w @ z)
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 6)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    if batched:
+        z0 = jnp.stack([z0, 2.0 * z0, -0.7 * z0])
+        kw["batch_axis"] = 0
+    ts = jnp.linspace(0.0, 1.0, 9)
+
+    def loss(w):
+        ys, stats = odeint(f, z0, ts, (w,), solver="dopri5",
+                           grad_method=method, rtol=1e-5, atol=1e-5,
+                           max_steps=64, use_pallas=use_pallas,
+                           interpolate_ts=interpolate, **kw)
+        return jnp.sum(ys ** 2), (ys, stats)
+
+    (_, (ys, stats)), g = jax.value_and_grad(loss, has_aux=True)(w)
+    return np.asarray(ys), np.asarray(g), stats
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+@pytest.mark.parametrize("batched", [False, True])
+def test_interpolated_close_to_landed(method, batched):
+    """Interpolated outputs sit within tolerance-scale distance of the
+    forced-landing solve, and gradients agree to matching precision."""
+    ys0, g0, st0 = _interp_case(method, False, batched, False)
+    ys1, g1, st1 = _interp_case(method, False, batched, True)
+    np.testing.assert_allclose(ys1, ys0, atol=5e-4)
+    scale = max(np.abs(g0).max(), 1e-12)
+    assert np.abs(g1 - g0).max() / scale < 5e-3, method
+    # and it genuinely takes fewer accepted steps
+    assert int(np.asarray(st1.n_steps).sum()) < \
+        int(np.asarray(st0.n_steps).sum())
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+@pytest.mark.parametrize("batched", [False, True])
+def test_interpolate_pallas_parity(method, batched, _interpret_kernels):
+    """Pallas vs pytree under interpolate_ts: identical accepted grids,
+    bit-equal endpoint states; interior interpolant reads may differ by
+    a few ulp of the coefficient scale (XLA fuses the polynomial-eval
+    chains differently per program), gradients to ≤1e-5 rel."""
+    if jax.config.jax_enable_x64:
+        pytest.skip("pallas kernels are f32; x64 pytree math diverges "
+                    "by design (same policy as the grad-suite parity "
+                    "tests)")
+    ys0, g0, st0 = _interp_case(method, False, batched, True)
+    ys1, g1, st1 = _interp_case(method, True, batched, True)
+    np.testing.assert_array_equal(np.asarray(st0.n_steps),
+                                  np.asarray(st1.n_steps))
+    np.testing.assert_array_equal(ys0[0], ys1[0])
+    np.testing.assert_array_equal(ys0[-1], ys1[-1])
+    np.testing.assert_allclose(ys1, ys0, atol=2e-5)
+    scale = max(np.abs(g0).max(), 1e-12)
+    assert np.abs(g1 - g0).max() / scale < 1e-5, method
+
+
+def test_interpolate_batched_matches_vmap_of_solo():
+    """batch_axis + interpolate_ts keeps the vmap-equivalence contract."""
+    def f(t, z, w):
+        return jnp.tanh(w @ z)
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 6)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    z0b = jnp.stack([z0, 2.0 * z0, -0.7 * z0])
+    ts = jnp.linspace(0.0, 1.0, 9)
+    kw = dict(solver="dopri5", grad_method="aca", rtol=1e-5, atol=1e-5,
+              max_steps=64, interpolate_ts=True)
+
+    ys_b, st_b = odeint(f, z0b, ts, (w,), batch_axis=0, **kw)
+    ys_v, st_v = jax.vmap(
+        lambda z: odeint(f, z, ts, (w,), **kw), out_axes=(1, 0))(z0b)
+    np.testing.assert_array_equal(np.asarray(st_b.n_steps),
+                                  np.asarray(st_v.n_steps))
+    np.testing.assert_allclose(np.asarray(ys_b), np.asarray(ys_v),
+                               atol=1e-6)
+
+
+def test_interpolate_composes_with_segmented_aca():
+    """checkpoint_segments + interpolate_ts: the segmented sweep replays
+    interval + interpolant from re-integrated states — gradients match
+    the full-buffer sweep."""
+    def f(t, z, w):
+        return jnp.tanh(w @ z)
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 6)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    ts = jnp.linspace(0.0, 2.0, 17)
+
+    def g_of(segs, batched):
+        zz = jnp.stack([z0, 1.3 * z0]) if batched else z0
+        def loss(w):
+            ys, _ = odeint(f, zz, ts, (w,), solver="dopri5",
+                           grad_method="aca", rtol=1e-6, atol=1e-6,
+                           max_steps=64, interpolate_ts=True,
+                           checkpoint_segments=segs,
+                           batch_axis=0 if batched else None)
+            return jnp.sum(ys ** 2)
+        return np.asarray(jax.grad(loss)(w))
+
+    for batched in (False, True):
+        g_full = g_of(None, batched)
+        g_seg = g_of(4, batched)
+        np.testing.assert_allclose(g_seg, g_full, rtol=1e-6, atol=1e-8)
+
+
+# ------------------------------------------------------- odeint_dense
+
+def test_dense_solution_accuracy_and_knots():
+    sol, stats = odeint_dense(lambda t, z, k: k * z, jnp.array([2.0]),
+                              0.0, 3.0, (jnp.float32(-0.8),),
+                              rtol=1e-7, atol=1e-7)
+    assert not bool(stats.overflow)
+    tq = jnp.linspace(0.0, 3.0, 64)
+    vals = np.asarray(sol.evaluate(tq))[:, 0]
+    exact = 2.0 * np.exp(-0.8 * np.asarray(tq))
+    np.testing.assert_allclose(vals, exact, atol=1e-5)
+    # t0 evaluation is the stored step-start state bitwise (P(0) = z0)
+    assert float(sol.evaluate(jnp.float32(0.0))[0]) == 2.0
+
+
+def test_dense_solution_reverse_time():
+    sol, stats = odeint_dense(lambda t, z, k: k * z, jnp.array([2.0]),
+                              3.0, 0.0, (jnp.float32(-0.8),),
+                              rtol=1e-7, atol=1e-7)
+    assert not bool(stats.overflow)
+    tq = jnp.linspace(3.0, 0.0, 16)
+    vals = np.asarray(sol.evaluate(tq))[:, 0]
+    # the solution GROWS backwards to 2·e^2.4 ≈ 22: relative tolerance
+    exact = 2.0 * np.exp(-0.8 * (np.asarray(tq) - 3.0))
+    np.testing.assert_allclose(vals, exact, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_solution_shapes_and_jit():
+    sol, _ = odeint_dense(lambda t, z: -z, jnp.ones((4,)), 0.0, 1.0,
+                          rtol=1e-6, atol=1e-6)
+    assert np.asarray(sol.evaluate(0.5)).shape == (4,)
+    assert np.asarray(sol.evaluate(jnp.zeros((3, 2)))).shape == (3, 2, 4)
+    # DenseSolution is a pytree: evaluate jits/vmaps freely
+    v = jax.jit(lambda s, t: s.evaluate(t))(sol, jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(v),
+                               np.asarray(sol.evaluate(0.25)))
+
+
+def test_dense_rejects_fixed_solver():
+    with pytest.raises(ValueError, match="adaptive"):
+        odeint_dense(lambda t, z: -z, jnp.ones(2), 0.0, 1.0, solver="rk4")
+
+
+def test_dense_overflow_flagged():
+    _, stats = odeint_dense(lambda t, z: 50 * jnp.cos(50 * t) * z,
+                            jnp.float32(1.0), 0.0, 10.0,
+                            rtol=1e-9, atol=1e-9, max_steps=4)
+    assert bool(stats.overflow)
+
+
+# ------------------------------------------------- merged irregular grid
+
+def test_merged_time_grid_roundtrip():
+    ts = jnp.asarray([[0.0, 0.5, 1.0], [0.0, 0.25, 1.0]])
+    grid = merged_time_grid(ts)
+    tu, idx = np.asarray(grid["t_union"]), np.asarray(grid["idx"])
+    assert (np.diff(tu) > 0).all()          # strictly increasing: odeint-legal
+    np.testing.assert_array_equal(tu[idx], np.asarray(ts))

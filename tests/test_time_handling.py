@@ -1,0 +1,175 @@
+"""Time-handling contracts: dtype derivation, ts validation, the Hairer
+hinit exponent, and reverse-time (descending-``ts``) solving.
+
+The reverse-time acceptance gate: a descending-``ts`` ACA solve must
+match the negated-time ascending solve *bit-exactly* on the forward
+trajectory and to ≤1e-6 relative on gradients for all three methods,
+across {pytree, pallas} × {solo, batched}.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GRAD_METHODS, odeint, odeint_final
+from repro.core.controller import initial_stepsize
+
+
+# ------------------------------------------------------- hinit exponent
+
+def test_hinit_uses_order_plus_one_exponent():
+    """Hairer I.4 step (f): h1 = (0.01 / max(d1, d2))^(1/(p+1)) — the
+    exponent must be 1/(order + 1), not 1/order (regression pin)."""
+    rtol = atol = 1e-3
+
+    def f(t, z):
+        return z
+
+    # z0 = 1: scale = 2e-3, d0 = d1 = 500, h0 = 0.01·d0/d1 = 0.01,
+    # f1 = 1.01 -> d2 = (0.01/2e-3)/0.01 = 500 = dmax
+    for order, dmax in [(5, 500.0), (2, 500.0)]:
+        h = float(initial_stepsize(f, 0.0, jnp.float32(1.0), (), order,
+                                   rtol, atol))
+        expected = min(100.0 * 0.01, (0.01 / dmax) ** (1.0 / (order + 1)))
+        wrong = (0.01 / dmax) ** (1.0 / order)
+        assert abs(h - expected) < 1e-4 * expected, (order, h, expected)
+        assert abs(h - wrong) > 1e-2 * expected  # the old exponent fails
+
+
+# ------------------------------------------------------ time dtype (x64)
+
+def test_odeint_final_time_dtype_follows_x64():
+    """odeint_final must not hardcode float32 eval times: under
+    JAX_ENABLE_X64 the [t0, t1] grid is float64, so t0/t1 are not
+    silently truncated."""
+    seen = {}
+
+    def f(t, z):
+        seen["tdt"] = jnp.result_type(t)
+        return -z
+
+    with jax.experimental.enable_x64():
+        odeint_final(f, jnp.ones(2, jnp.float32), 0.0, 1.0,
+                     solver="dopri5", rtol=1e-4, atol=1e-4)
+    assert seen["tdt"] == jnp.float64
+
+    with jax.experimental.disable_x64():
+        odeint_final(f, jnp.ones(2, jnp.float32), 0.0, 1.0,
+                     solver="dopri5", rtol=1e-4, atol=1e-4)
+    assert seen["tdt"] == jnp.float32
+
+    # explicit endpoint dtypes win over the default
+    with jax.experimental.enable_x64():
+        odeint_final(f, jnp.ones(2, jnp.float32),
+                     jnp.float32(0.0), jnp.float32(1.0),
+                     solver="dopri5", rtol=1e-4, atol=1e-4)
+        assert seen["tdt"] == jnp.float32
+
+
+# --------------------------------------------------- batch_axis rank-0
+
+def test_batch_axis_rank0_leaf_raises_named_error():
+    z0 = {"vec": jnp.ones((4, 3)), "scalar": jnp.float32(1.0)}
+    with pytest.raises(ValueError, match="scalar.*rank-0"):
+        odeint(lambda t, z: jax.tree.map(jnp.negative, z), z0,
+               jnp.array([0.0, 1.0]), batch_axis=0)
+
+
+# ----------------------------------------------------- ts validation
+
+def test_unsorted_ts_rejected():
+    with pytest.raises(ValueError, match="strictly monotone"):
+        odeint(lambda t, z: -z, jnp.float32(1.0),
+               jnp.array([0.0, 2.0, 1.0]))
+
+
+def test_repeated_ts_rejected():
+    with pytest.raises(ValueError, match="strictly monotone"):
+        odeint(lambda t, z: -z, jnp.float32(1.0),
+               jnp.array([0.0, 1.0, 1.0]))
+
+
+def test_descending_ts_accepted():
+    ys, stats = odeint(lambda t, z: -z, jnp.float32(1.0),
+                       jnp.array([1.0, 0.5, 0.0]), solver="dopri5",
+                       rtol=1e-6, atol=1e-6)
+    # z(t) = z(1)·e^{1-t} going backwards from t=1
+    exact = np.exp(1.0 - np.array([1.0, 0.5, 0.0]))
+    np.testing.assert_allclose(np.asarray(ys), exact, rtol=1e-4)
+    assert not bool(stats.overflow)
+
+
+# ------------------------------------------------- reverse-time solving
+
+@pytest.fixture
+def _interpret_kernels():
+    from repro.kernels import ops
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _field(t, z, w):
+    # time-dependent so the internal clock negation is actually exercised
+    return jnp.tanh(w @ z) * (0.6 + 0.4 * jnp.cos(t))
+
+
+def _reverse_case(method, use_pallas, batched):
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 6)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    kw = dict(solver="dopri5", grad_method=method, rtol=1e-6, atol=1e-6,
+              max_steps=128, use_pallas=use_pallas)
+    if batched:
+        z0 = jnp.stack([z0, 1.5 * z0, -0.5 * z0])
+        kw["batch_axis"] = 0
+    ts_desc = jnp.linspace(1.0, 0.0, 5)
+
+    def loss_desc(w):
+        ys, _ = odeint(_field, z0, ts_desc, (w,), **kw)
+        return jnp.sum(ys ** 2), ys
+
+    def loss_neg(w):
+        # the hand-negated ascending reference problem
+        f_neg = lambda s, z, ww: jax.tree.map(
+            jnp.negative, _field(-s, z, ww))
+        ys, _ = odeint(f_neg, z0, -ts_desc, (w,), **kw)
+        return jnp.sum(ys ** 2), ys
+
+    (_, ys_d), g_d = jax.value_and_grad(loss_desc, has_aux=True)(w)
+    (_, ys_n), g_n = jax.value_and_grad(loss_neg, has_aux=True)(w)
+    return map(np.asarray, (ys_d, g_d, ys_n, g_n))
+
+
+@pytest.mark.parametrize("method", GRAD_METHODS)
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("batched", [False, True])
+def test_descending_equals_negated_ascending(method, use_pallas, batched,
+                                             _interpret_kernels):
+    """The acceptance gate: descending ``ts`` == the negated-time
+    ascending solve, bit-exactly on the forward trajectory and ≤1e-6
+    relative on gradients, for every method × stepper path × batching."""
+    ys_d, g_d, ys_n, g_n = _reverse_case(method, use_pallas, batched)
+    np.testing.assert_array_equal(ys_d, ys_n)
+    scale = max(float(np.abs(g_n).max()), 1e-12)
+    assert float(np.abs(g_d - g_n).max()) / scale <= 1e-6, method
+
+
+def test_reverse_solve_inverts_forward():
+    """Semantics: integrating forward then backwards lands back on z0
+    (up to solve tolerance) — the three-body / time-series use case."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (5, 5)) * 0.5
+    z0 = jax.random.normal(jax.random.PRNGKey(3), (5,))
+    kw = dict(solver="dopri5", rtol=1e-8, atol=1e-8)
+    ys, _ = odeint(_field, z0, jnp.array([0.0, 2.0]), (w,), **kw)
+    back, _ = odeint(_field, ys[-1], jnp.array([2.0, 0.0]), (w,), **kw)
+    np.testing.assert_allclose(np.asarray(back[-1]), np.asarray(z0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_odeint_final_reverse_window():
+    """odeint_final(t0 > t1) runs the descending path (NodeConfig.t0)."""
+    zT, stats = odeint_final(lambda t, z: -z, jnp.float32(1.0), 1.0, 0.0,
+                             solver="dopri5", rtol=1e-7, atol=1e-7)
+    assert abs(float(zT) - np.e) < 1e-4
+    assert not bool(stats.overflow)
