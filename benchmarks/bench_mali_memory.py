@@ -1,0 +1,108 @@
+"""O(1)-state reverse-gradient memory — the MALI claim, measured.
+
+ACA's exactness costs a trajectory checkpoint: O(N_t · dim) residual
+state (or O(√N_t · dim) segmented).  MALI stores **no states at all** —
+the backward sweep re-derives each accepted state by inverting ALF
+steps from the terminal pair — so the only per-step residual is the
+scalar grid (t, h, out_idx): 3 scalars per step, independent of ``dim``.
+
+Measured quantity: ``analyze_hlo`` ``bytes_min`` over the compiled
+``value_and_grad`` HLO (same metric as ``bench_memory``; the residual
+buffers' dynamic-update-slices dominate, so the number scales with peak
+buffer residency).  Sweeping the step budget N = max_steps:
+
+  * ``mali`` residual bytes must stay **flat**: ≤ 1.05× from N = 32 to
+    N = 256 (the acceptance gate — the 3N scalar grid is noise next to
+    the state-sized terminal pair and parameters);
+  * ``aca`` (full buffer) must grow with N over the same sweep — the
+    contrast that motivates the method-selection table
+    (``docs/method-selection.md``).
+
+Headline numbers land in the shared JSON schema (``common.emit_json``)
+and therefore in ``BENCH_mali_memory.json`` when ``BENCH_ARTIFACT_DIR``
+is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import odeint
+from repro.launch.hlo_cost import analyze_hlo
+from .common import emit, emit_json
+
+D = 128
+B = 4
+
+MALI_FLATNESS_GATE = 1.05   # acceptance: mali residual growth N=32->256
+
+
+def _f(t, z, w1, w2):
+    return jnp.tanh(z @ w1) @ w2 - 0.1 * z
+
+
+def _residual_bytes(max_steps: int, grad_method: str) -> int:
+    """bytes_min of one compiled value_and_grad at this step budget."""
+    w1 = jax.random.normal(jax.random.PRNGKey(0), (D, D)) * 0.4
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (D, D)) * 0.4
+    z0 = jax.random.normal(jax.random.PRNGKey(2), (B, D))
+
+    def loss(w1, w2):
+        ys, _ = odeint(
+            _f, z0, jnp.array([0.0, 1.0]), (w1, w2),
+            solver=None if grad_method == "mali" else "dopri5",
+            grad_method=grad_method, rtol=1e-4, atol=1e-4,
+            max_steps=max_steps, max_trials=8)
+        return (ys[-1] ** 2).mean()
+
+    g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1))
+                ).lower(w1, w2).compile()
+    return int(analyze_hlo(g.as_text()).bytes_min)
+
+
+def run(quick: bool = False):
+    horizons = [32, 256] if quick else [32, 128, 256, 512]
+    lo, hi = horizons[0], horizons[-1]
+
+    by = {}
+    for method in ("mali", "aca"):
+        for steps in horizons:
+            by[(method, steps)] = _residual_bytes(steps, method)
+            emit(f"mali_memory_bytes/{method}_{steps}",
+                 by[(method, steps)],
+                 "analyze_hlo bytes_min of value_and_grad")
+
+    mali_growth = by[("mali", hi)] / max(by[("mali", lo)], 1)
+    aca_growth = by[("aca", hi)] / max(by[("aca", lo)], 1)
+
+    # acceptance gates: mali residual state is flat in step count while
+    # the ACA full buffer grows with it
+    assert mali_growth <= MALI_FLATNESS_GATE, (
+        f"mali residual bytes grew {mali_growth:.3f}x from N={lo} to "
+        f"N={hi} (gate {MALI_FLATNESS_GATE}x) — the O(1)-state claim "
+        "regressed", by)
+    assert aca_growth > mali_growth + 0.10, (
+        "ACA full-buffer residuals did not grow past mali's — the "
+        "measurement lost its contrast", by)
+
+    emit_json("mali_memory", {
+        "steps_lo": lo,
+        "steps_hi": hi,
+        "bytes_mali_lo": by[("mali", lo)],
+        "bytes_mali_hi": by[("mali", hi)],
+        "bytes_aca_lo": by[("aca", lo)],
+        "bytes_aca_hi": by[("aca", hi)],
+        "growth_mali": round(mali_growth, 4),
+        "growth_aca": round(aca_growth, 4),
+        "mali_vs_aca_at_hi": round(
+            by[("mali", hi)] / max(by[("aca", hi)], 1), 4),
+    })
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

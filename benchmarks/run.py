@@ -13,10 +13,10 @@ import time
 import traceback
 
 from . import (bench_batched_solve, bench_classification,
-               bench_dense_eval, bench_memory, bench_method_costs,
-               bench_node_lm, bench_reliability, bench_reverse_error,
-               bench_solver_robustness, bench_threebody,
-               bench_timeseries, bench_toy_gradient)
+               bench_dense_eval, bench_mali_memory, bench_memory,
+               bench_method_costs, bench_node_lm, bench_reliability,
+               bench_reverse_error, bench_solver_robustness,
+               bench_threebody, bench_timeseries, bench_toy_gradient)
 from .common import emit
 
 BENCHES = [
@@ -32,6 +32,7 @@ BENCHES = [
     ("batched_solve (beyond-paper: batch_axis)", bench_batched_solve.run),
     ("memory (beyond-paper: segmented ACA)", bench_memory.run),
     ("dense_eval (beyond-paper: interpolate_ts)", bench_dense_eval.run),
+    ("mali_memory (beyond-paper: reversible MALI)", bench_mali_memory.run),
 ]
 
 

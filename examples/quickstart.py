@@ -26,13 +26,18 @@ print("z(t):", np.round(np.asarray(ys), 5))
 print("exact:", np.round(1.5 * np.exp(k * np.asarray(ts)), 5))
 print(f"accepted steps: {int(stats.n_steps)}, NFE: {int(stats.nfe)}")
 
-# --- 2. gradients: ACA vs adjoint vs naive -----------------------------
+# --- 2. gradients: ACA vs adjoint vs naive vs MALI ---------------------
 analytic = 2 * 1.5 * np.exp(2 * k * T)
 print(f"\nanalytic dL/dz0 = {analytic:.6e}   (L = z(T)^2)")
-for method in ("aca", "adjoint", "naive"):
+for method in ("aca", "adjoint", "naive", "mali"):
     def loss(z0):
+        # mali integrates with the reversible ALF pair stepper (no RK
+        # tableau): solver resolves to "alf", and its 2nd-order steps
+        # need a larger accepted-step budget at this tolerance
         ys, _ = odeint(f, z0, jnp.array([0.0, T]), (jnp.float32(k),),
-                       solver="dopri5", grad_method=method,
+                       solver=None if method == "mali" else "dopri5",
+                       grad_method=method,
+                       max_steps=4096 if method == "mali" else 256,
                        rtol=1e-5, atol=1e-5)
         return (ys[-1] ** 2).sum()
 

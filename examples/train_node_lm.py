@@ -41,7 +41,7 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--discrete", action="store_true")
     ap.add_argument("--grad-method", default="aca",
-                    choices=["aca", "adjoint", "naive"])
+                    choices=["aca", "adjoint", "naive", "mali"])
     ap.add_argument("--adaptive", action="store_true",
                     help="paper-matching adaptive NODE_TRAIN config "
                          "(HeunEuler 1e-2, fused Pallas solver)")

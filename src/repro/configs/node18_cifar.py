@@ -32,6 +32,22 @@ NODE_TRAIN = NodeConfig(
     checkpoint_segments="auto",
 )
 
+# Reversible-integrator variant: the asynchronous-leapfrog pair stepper
+# with O(1)-state-memory exact-reverse gradients (grad_method="mali") —
+# per-solve state memory drops to O(dim) regardless of step count, at
+# one field evaluation per trial.  Same tolerance as the paper's setup;
+# ALF is 2nd order like HeunEuler's advancing method, so the accepted
+# grids are comparable.  See docs/method-selection.md for the
+# memory/accuracy/wall-clock trade against NODE_TRAIN.
+NODE_TRAIN_MALI = NodeConfig(
+    enabled=True,
+    solver="alf",
+    grad_method="mali",
+    rtol=1e-2,
+    atol=1e-2,
+    use_pallas=True,
+)
+
 CONFIG = ModelConfig(
     name="node18-cifar",
     family="dense",

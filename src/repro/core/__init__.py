@@ -2,9 +2,11 @@
 
 Public API:
     odeint(f, z0, ts, args, solver=, grad_method="aca", ...)
+        grad_method: "aca" | "adjoint" | "naive" | "mali"
     odeint_final(f, z0, t0, t1, args, ...)
     node_block_apply / NodeConfig — continuous-depth blocks for model stacks
-    get_tableau / Tableau — explicit RK solvers (Euler..Dopri5)
+    get_tableau / Tableau — explicit RK solvers (Euler..Dopri5);
+        solver="alf" is the reversible pair integrator of "mali"
 """
 
 from .api import (
@@ -29,12 +31,18 @@ from .odeint_adjoint import (
     odeint_adjoint_batched,
     odeint_adjoint_fixed,
 )
+from .odeint_mali import odeint_mali, odeint_mali_batched
 from .odeint_naive import (
     odeint_naive,
     odeint_naive_batched,
     odeint_naive_fixed,
 )
-from .stepper import rk_step, rk_step_batched
+from .stepper import (
+    alf_step,
+    alf_step_inverse,
+    rk_step,
+    rk_step_batched,
+)
 from .tableaus import (
     ADAPTIVE_SOLVERS,
     FIXED_SOLVERS,
@@ -51,7 +59,9 @@ __all__ = [
     "NodeConfig", "node_block_apply",
     "odeint_aca", "odeint_aca_batched", "odeint_aca_fixed",
     "odeint_adjoint", "odeint_adjoint_batched", "odeint_adjoint_fixed",
+    "odeint_mali", "odeint_mali_batched",
     "odeint_naive", "odeint_naive_batched", "odeint_naive_fixed",
-    "rk_step", "rk_step_batched", "Tableau", "get_tableau",
+    "rk_step", "rk_step_batched", "alf_step", "alf_step_inverse",
+    "Tableau", "get_tableau",
     "ADAPTIVE_SOLVERS", "FIXED_SOLVERS",
 ]

@@ -1,8 +1,8 @@
 """Unified odeint front-end:  solver × gradient-method dispatch.
 
     ys, stats = odeint(f, z0, ts, args,
-                       solver="dopri5",          # any tableau name
-                       grad_method="aca",        # aca | adjoint | naive
+                       solver="dopri5",          # tableau name, or "alf"
+                       grad_method="aca",        # aca | adjoint | naive | mali
                        rtol=1e-6, atol=1e-6,
                        max_steps=256,            # checkpoint capacity
                        max_trials=12,            # stepsize trials per step
@@ -19,7 +19,11 @@ reverse-time solve (internally solved as the time-negated ascending
 problem, so every gradient method — including ACA's bit-exact
 checkpoint replay — works unchanged); ``ys[k] = z(ts[k])`` with
 ``ys[0] = z0``.  Gradients flow to ``z0`` and ``args`` under every
-method; the methods differ exactly as the paper's Table 1 describes.
+method; the methods differ exactly as the paper's Table 1 describes,
+plus the paper-family successor ``grad_method="mali"`` (reversible
+asynchronous-leapfrog: O(1) state memory, exact reverse reconstruction;
+pairs with ``solver="alf"`` — see ``odeint_mali.py`` and
+``docs/method-selection.md``).
 
 With ``batch_axis=a``, leaves of ``z0`` carry a batch dimension at axis
 ``a`` and ``f`` stays *per-sample*: each batch element is integrated on
@@ -49,6 +53,7 @@ from .odeint_adjoint import (
     odeint_adjoint_batched,
     odeint_adjoint_fixed,
 )
+from .odeint_mali import odeint_mali, odeint_mali_batched
 from .odeint_naive import (
     odeint_naive,
     odeint_naive_batched,
@@ -59,7 +64,15 @@ from .tableaus import Tableau, get_tableau
 
 PyTree = Any
 
-GRAD_METHODS = ("aca", "adjoint", "naive")
+GRAD_METHODS = ("aca", "adjoint", "naive", "mali")
+
+
+def _is_alf(solver) -> bool:
+    """True when ``solver`` names the reversible asynchronous-leapfrog
+    pair integrator (the only pairing ``grad_method='mali'`` accepts —
+    ALF is not an RK tableau)."""
+    return (isinstance(solver, str)
+            and solver.lower().replace("-", "_") == "alf")
 
 
 def _ts_direction(ts: jnp.ndarray) -> int:
@@ -101,7 +114,7 @@ def odeint(
     ts,
     args: PyTree = (),
     *,
-    solver: Union[str, Tableau] = "dopri5",
+    solver: Optional[Union[str, Tableau]] = None,
     grad_method: str = "aca",
     rtol: float = 1e-6,
     atol: float = 1e-6,
@@ -136,7 +149,7 @@ def odeint(
     tested configurations; only the error-norm reduction is tiled, so a
     trial whose scaled error sits within ~1 ulp of the accept threshold
     could in principle decide differently) and gradients flow through
-    all three methods.  States whose leaves mix dtypes (or are not
+    all four methods.  States whose leaves mix dtypes (or are not
     inexact) silently fall back to the pytree path.
 
     ``batch_axis=a`` enables the per-sample batched mode: every leaf of
@@ -145,8 +158,8 @@ def odeint(
     solvers then give every element its own stepsize-controller state,
     accept/reject mask and checkpoint row inside one fused while_loop —
     matching ``jax.vmap`` of the unbatched solver instead of degrading
-    the stepsize search to one lockstep decision — and all three
-    gradient methods replay/re-integrate per element.  Outputs gain the
+    the stepsize search to one lockstep decision — and all four
+    gradient methods replay/re-integrate/invert per element.  Outputs gain the
     leading time axis as usual: ``ys[k]`` has the shape of the batched
     ``z0`` (batch at axis ``a`` of each state leaf), and ``stats``
     fields become (B,) per-element counters; an element that has landed
@@ -182,17 +195,53 @@ def odeint(
     releases.  Composes with ``batch_axis``, ``use_pallas``,
     ``checkpoint_segments`` and descending ``ts``.
 
+    ``grad_method="mali"`` (paired with ``solver="alf"`` — the default
+    when ``solver`` is omitted) integrates with the reversible
+    asynchronous-leapfrog pair stepper and reconstructs the trajectory
+    in the backward sweep by *inverting* accepted steps from the
+    terminal state — bitwise, via the fixed-point lattice pair of
+    ``stepper.alf_step`` — so no state checkpoint buffer exists at all:
+    state memory is O(dim) regardless of step count (only the cheap
+    scalar t/h grid is kept).  One field evaluation per ψ trial, 2nd
+    order.  Composes with ``batch_axis``, ``use_pallas`` and descending
+    ``ts``; rejects ``checkpoint_segments`` (nothing to segment) and
+    ``interpolate_ts``.  See ``docs/method-selection.md``.
+
     Descending ``ts`` runs the whole solve in reverse time by negating
     the clock (``dz/ds = -f(-s, z)`` over ascending ``s = -t``): the
     forward trajectory is bit-identical to the negated-time ascending
-    solve, and all three gradient methods apply unchanged.
+    solve, and all gradient methods apply unchanged.
     """
-    tab = get_tableau(solver) if isinstance(solver, str) else solver
+    if grad_method not in GRAD_METHODS:
+        raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
+    if solver is None:
+        # mali integrates with the reversible ALF pair stepper; every
+        # other method defaults to the paper's Dopri5
+        solver = "alf" if grad_method == "mali" else "dopri5"
+    if grad_method == "mali" and not _is_alf(solver):
+        name = solver if isinstance(solver, str) else solver.name
+        raise ValueError(
+            f"grad_method='mali' integrates with the reversible "
+            f"asynchronous-leapfrog pair stepper (solver='alf'), not an "
+            f"RK tableau (got {name!r}); drop the solver argument or "
+            "pass solver='alf'")
+    if _is_alf(solver) and grad_method != "mali":
+        raise ValueError(
+            f"solver='alf' is the reversible pair integrator whose "
+            f"inverse IS the gradient method — it pairs only with "
+            f"grad_method='mali' (got {grad_method!r})")
+    mali = grad_method == "mali"
+    tab = None if mali else (
+        get_tableau(solver) if isinstance(solver, str) else solver)
     ts = jnp.asarray(ts)
     if ts.ndim != 1 or ts.shape[0] < 2:
         raise ValueError("ts must be a 1D array of at least 2 times")
-    if grad_method not in GRAD_METHODS:
-        raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
+    if checkpoint_segments is not None and mali:
+        raise ValueError(
+            "checkpoint_segments is meaningless with grad_method='mali': "
+            "MALI keeps no state checkpoints at all — its backward sweep "
+            "reconstructs every state by inverting steps from the "
+            "terminal pair in O(1) memory; drop checkpoint_segments")
     if checkpoint_segments is not None and (
             grad_method != "aca" or not tab.adaptive):
         raise ValueError(
@@ -200,6 +249,12 @@ def odeint(
             f"adaptive solver (got {grad_method!r} / {tab.name!r}): only "
             "the ACA trajectory checkpoint stores per-step states to "
             "segment")
+    if interpolate_ts and mali:
+        raise ValueError(
+            "interpolate_ts is not supported with grad_method='mali': "
+            "the reversible backward sweep reconstructs exact step "
+            "landings only (no interpolant cotangent routing); use "
+            "grad_method='aca' for dense-output gradients")
     if interpolate_ts and not tab.adaptive:
         raise ValueError(
             "interpolate_ts requires an adaptive solver (got "
@@ -219,6 +274,10 @@ def odeint(
             trial_budget=trial_budget, use_pallas=use_pallas,
             checkpoint_segments=checkpoint_segments,
             interpolate_ts=interpolate_ts)
+
+    if mali:
+        return odeint_mali(f, z0, ts, args, rtol=rtol, atol=atol,
+                           cfg=cfg, use_pallas=use_pallas)
 
     if tab.adaptive:
         if grad_method == "aca":
@@ -297,7 +356,11 @@ def _odeint_batched(
     z0 = jax.tree.map(
         lambda l, a: jnp.moveaxis(l, a, 0) if a else l, z0, axes)
 
-    if tab.adaptive:
+    if grad_method == "mali":  # tab is None: ALF pair integrator
+        ys, stats = odeint_mali_batched(
+            f, z0, ts, args, rtol=rtol, atol=atol, cfg=cfg,
+            use_pallas=use_pallas)
+    elif tab.adaptive:
         if grad_method == "aca":
             ys, stats = odeint_aca_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,

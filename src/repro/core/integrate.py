@@ -32,6 +32,17 @@ Two engines over the same Runge-Kutta stepper:
 * ``fixed_grid_solve`` — ``lax.scan`` over a precomputed grid.  Fully
   differentiable (this is also the "naive" method for fixed-step solvers).
 
+* ``mali_adaptive_solve`` / ``batched_mali_adaptive_solve`` — the
+  reversible asynchronous-leapfrog engines behind ``odeint(...,
+  grad_method="mali")``.  Same trial/accept loop shape as the RK
+  engines, but the carried state is the integer-lattice pair (z, v) of
+  ``stepper.alf_step`` and **no state checkpoint buffer exists at
+  all**: only the scalar grid (t_i, h_i, out_idx_i) is recorded — the
+  ``MaliGrid`` — because the backward sweep re-derives every accepted
+  state by *inverting* steps from the terminal pair (bitwise, see the
+  ALF section of ``stepper.py``).  State memory is O(dim), independent
+  of the accepted-step count.
+
 All engines integrate through a sorted array of evaluation times ``ts``
 (the solver is forced to land exactly on each ``ts[k]``), supporting
 latent-ODE style multi-time outputs.  States are arbitrary pytrees.
@@ -46,10 +57,17 @@ import jax.numpy as jnp
 
 from .controller import ControllerConfig, initial_stepsize, propose_stepsize
 from .stepper import (
+    ALF_ORDER,
     InterpCoeffs,
+    alf_lattice_exponent,
+    alf_lattice_exponent_batched,
+    alf_step,
+    alf_step_batched,
     error_ratio,
     interp_eval,
     interp_fit,
+    lattice_decode,
+    lattice_encode,
     maybe_flatten,
     rk_step,
     rk_step_batched,
@@ -213,6 +231,10 @@ def _buffer_set(buf: PyTree, i, val: PyTree) -> PyTree:
     return jax.tree.map(lambda b, v: b.at[i].set(v), buf, val)
 
 
+def _buffer_slot(buf: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda b: b[i], buf)
+
+
 def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
@@ -332,6 +354,7 @@ def adaptive_while_solve(
     n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
     natural = interpolate_ts or store_coeffs
 
+    hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals
     if h0 is None:
         h0 = initial_stepsize(f, ts[0], z0, args, tab.order, rtol, atol)
     h0 = jnp.asarray(h0, tdt)
@@ -343,7 +366,7 @@ def adaptive_while_solve(
         z0, max_steps, tdt, n_snap)
 
     k0 = f(ts[0], z0, *args)
-    nfe0 = jnp.asarray(1 + 2, jnp.int32)  # hinit costs 2 evals when h0 is None
+    nfe0 = jnp.asarray(1 + hinit_evals, jnp.int32)
 
     carry0 = dict(
         t=ts[0], z=z0, k0=k0, h=h0,
@@ -572,6 +595,7 @@ def batched_adaptive_while_solve(
     n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
     targs = args
 
+    hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals per elt
     if h0 is None:
         h0 = jax.vmap(lambda z: initial_stepsize(
             f, ts[0], z, targs, tab.order, rtol, atol))(z0)
@@ -584,7 +608,7 @@ def batched_adaptive_while_solve(
 
     fb0 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))
     k0 = fb0(jnp.full((B,), ts[0], tdt), z0)
-    nfe0 = jnp.full((B,), 1 + 2, jnp.int32)  # hinit costs 2 evals per elt
+    nfe0 = jnp.full((B,), 1 + hinit_evals, jnp.int32)
 
     carry0 = dict(
         t=jnp.full((B,), ts[0], tdt), z=z0, k0=k0, h=h0,
@@ -817,3 +841,284 @@ def fixed_grid_solve(
         overflow=jnp.asarray(False),
     )
     return ys, stats
+
+
+# --------------------------------------------------------------------------
+# MALI engines: reversible asynchronous-leapfrog adaptive solving
+# --------------------------------------------------------------------------
+
+
+class MaliGrid(NamedTuple):
+    """The MALI solve's reverse-reconstruction record: scalars only.
+
+    Where ACA's ``Checkpoints`` stores every accepted *state*, MALI
+    stores none: ``t``/``h``/``out_idx`` are the accepted scalar grid
+    (same conventions as ``Checkpoints`` — interval start time, accepted
+    stepsize, eval-time landing index or -1; slots [0, n) valid), and
+    ``zT``/``vT`` are the single terminal lattice pair the backward
+    sweep starts inverting from.  ``scale_exp`` pins the per-solve
+    lattice (``stepper.alf_lattice_exponent``) so the backward decodes
+    on the identical quantum.  Batched solves carry a leading batch dim
+    on the scalar grids ((B, max_steps)), per-element ``n`` (B,),
+    batch-leading ``zT``/``vT`` leaves and per-element ``scale_exp``
+    (B,) — each element quantizes on its own lattice, exactly as
+    ``jax.vmap`` of the solo solve would.
+    """
+    t: jnp.ndarray            # (max_steps,) interval start times
+    h: jnp.ndarray            # (max_steps,) accepted stepsizes
+    out_idx: jnp.ndarray      # (max_steps,) int32 eval landing (or -1)
+    n: jnp.ndarray            # number of valid slots
+    zT: PyTree                # terminal position, integer lattice
+    vT: PyTree                # terminal velocity, integer lattice
+    scale_exp: jnp.ndarray    # lattice scale exponent (float32 scalar)
+
+
+def mali_adaptive_solve(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: Tuple,
+    rtol: float,
+    atol: float,
+    cfg: ControllerConfig,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[PyTree, MaliGrid, SolveStats]:
+    """Adaptive asynchronous-leapfrog solve through increasing ``ts``.
+
+    Same flattened trial/accept ``lax.while_loop`` as
+    ``adaptive_while_solve`` (Algorithm 1's stepsize search), but the
+    carry is the integer-lattice pair (z, v) of ``stepper.alf_step`` and
+    the only per-step record is the scalar grid — O(dim) state memory at
+    any horizon.  The embedded error is the free Euler-comparator gap
+    h·(w − v); one f evaluation per trial (accepted or rejected — ALF
+    has no extra stages and no FSAL to chain).  Returns (ys, grid,
+    stats) with ``ys[0] = z0`` exactly; interior/final outputs are the
+    decoded lattice states (within one quantum of the float trajectory).
+    Not reverse-differentiable — ``odeint_mali`` wraps it in custom_vjp.
+    """
+    n_eval = ts.shape[0]
+    tdt = ts.dtype
+    max_steps = cfg.max_steps
+    max_total_trials = max_steps * cfg.max_trials
+    targs = args
+
+    v0 = f(ts[0], z0, *targs)
+    scale_exp = alf_lattice_exponent(z0, v0)
+    zq0 = lattice_encode(z0, scale_exp)
+    vq0 = lattice_encode(v0, scale_exp)
+
+    hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals
+    if h0 is None:
+        h0 = initial_stepsize(f, ts[0], z0, targs, ALF_ORDER, rtol, atol)
+    h0 = jnp.asarray(h0, tdt)
+
+    ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
+
+    carry0 = dict(
+        t=ts[0], zq=zq0, vq=vq0, h=h0,
+        prev_ratio=jnp.asarray(1.0, jnp.float32),
+        i=jnp.asarray(0, jnp.int32),
+        eval_idx=jnp.asarray(1, jnp.int32),
+        trials=jnp.asarray(0, jnp.int32),
+        nfe=jnp.asarray(1 + hinit_evals, jnp.int32),  # + the v0 eval
+        ys=ys,
+        grid_t=jnp.zeros((max_steps,), tdt),
+        grid_h=jnp.zeros((max_steps,), tdt),
+        grid_oi=jnp.full((max_steps,), -1, jnp.int32),
+    )
+
+    tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+
+    def cond(c):
+        return (
+            (c["eval_idx"] < n_eval)
+            & (c["i"] < max_steps)
+            & (c["trials"] < max_total_trials)
+        )
+
+    def body(c):
+        t, h = c["t"], c["h"]
+        t_target = ts[c["eval_idx"]]
+        h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        h_use = jnp.clip(h, h_min, t_target - t)
+        res = alf_step(f, t, h_use, c["zq"], c["vq"], scale_exp, z0,
+                       targs)
+        z_f = lattice_decode(c["zq"], scale_exp, z0)
+        ratio = error_ratio(res.err, z_f, res.z_next, rtol, atol)
+        accept = (ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3))
+
+        t_new = t + h_use
+        hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
+            jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # --- on accept: record the scalar grid slot (t_i, h_i, oi) -----
+        i = c["i"]
+        grid_t = c["grid_t"].at[i].set(jnp.where(accept, t, c["grid_t"][i]))
+        grid_h = c["grid_h"].at[i].set(
+            jnp.where(accept, h_use, c["grid_h"][i]))
+        oi_val = jnp.where(hit, c["eval_idx"], jnp.asarray(-1, jnp.int32))
+        grid_oi = c["grid_oi"].at[i].set(
+            jnp.where(accept, oi_val, c["grid_oi"][i]))
+
+        # --- on eval-time hit: record the decoded output ---------------
+        ys = jax.tree.map(
+            lambda b, v: b.at[c["eval_idx"]].set(
+                jnp.where(hit, v, b[c["eval_idx"]])),
+            c["ys"], res.z_next)
+
+        h_next = jnp.asarray(propose_stepsize(
+            cfg, h_use, ratio, c["prev_ratio"], ALF_ORDER), tdt)
+
+        return dict(
+            t=jnp.where(accept, t_new, t),
+            zq=_where_tree(accept, res.zq_next, c["zq"]),
+            vq=_where_tree(accept, res.vq_next, c["vq"]),
+            h=h_next,
+            prev_ratio=jnp.where(
+                accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
+            i=i + accept.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            trials=c["trials"] + 1,
+            nfe=c["nfe"] + 1,  # one midpoint eval per ALF trial
+            ys=ys, grid_t=grid_t, grid_h=grid_h, grid_oi=grid_oi,
+        )
+
+    c = jax.lax.while_loop(cond, body, carry0)
+
+    grid = MaliGrid(t=c["grid_t"], h=c["grid_h"], out_idx=c["grid_oi"],
+                    n=c["i"], zT=c["zq"], vT=c["vq"], scale_exp=scale_exp)
+    stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
+                       overflow=c["eval_idx"] < n_eval)
+    return c["ys"], grid, stats
+
+
+def batched_mali_adaptive_solve(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: Tuple,
+    rtol: float,
+    atol: float,
+    cfg: ControllerConfig,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[PyTree, MaliGrid, SolveStats]:
+    """Per-sample batched MALI forward: ``odeint(..., batch_axis=0,
+    grad_method="mali")``.
+
+    One fused while_loop, one controller per batch element (the
+    ``batched_adaptive_while_solve`` contract), with the integer-lattice
+    pair carried per element on a per-element lattice (``scale_exp``
+    (B,) — each element quantizes exactly as a solo solve of its row
+    would).  Freezing differs from the RK engines: an h = 0
+    ALF trial is *not* the identity in v (the reflection still fires),
+    so rejected/finished elements are frozen purely by the accept mask —
+    integer ``where`` keeps their pair bit-stable.  Per-element scalar
+    grids feed the per-element backward inversion.
+    """
+    B = jax.tree.leaves(z0)[0].shape[0]
+    rows = jnp.arange(B)
+    n_eval = ts.shape[0]
+    tdt = ts.dtype
+    max_steps = cfg.max_steps
+    max_total_trials = max_steps * cfg.max_trials
+    targs = args
+
+    fb0 = jax.vmap(lambda ti, zi: f(ti, zi, *targs))
+    v0 = fb0(jnp.full((B,), ts[0], tdt), z0)
+    scale_exp = alf_lattice_exponent_batched(z0, v0)     # (B,)
+    zq0 = lattice_encode(z0, scale_exp)
+    vq0 = lattice_encode(v0, scale_exp)
+
+    hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals per elt
+    if h0 is None:
+        h0 = jax.vmap(lambda z: initial_stepsize(
+            f, ts[0], z, targs, ALF_ORDER, rtol, atol))(z0)
+    h0 = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
+
+    ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
+
+    carry0 = dict(
+        t=jnp.full((B,), ts[0], tdt), zq=zq0, vq=vq0, h=h0,
+        prev_ratio=jnp.ones((B,), jnp.float32),
+        i=jnp.zeros((B,), jnp.int32),
+        eval_idx=jnp.ones((B,), jnp.int32),
+        trials=jnp.zeros((B,), jnp.int32),
+        nfe=jnp.full((B,), 1 + hinit_evals, jnp.int32),
+        ys=ys,
+        grid_t=jnp.zeros((B, max_steps), tdt),
+        grid_h=jnp.zeros((B, max_steps), tdt),
+        grid_oi=jnp.full((B, max_steps), -1, jnp.int32),
+    )
+
+    tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
+
+    def live_mask(c):
+        return (
+            (c["eval_idx"] < n_eval)
+            & (c["i"] < max_steps)
+            & (c["trials"] < max_total_trials)
+        )
+
+    def cond(c):
+        return jnp.any(live_mask(c))
+
+    def body(c):
+        live = live_mask(c)
+        t, h = c["t"], c["h"]
+        t_target = ts[jnp.minimum(c["eval_idx"], n_eval - 1)]     # (B,)
+        h_min = 16.0 * tiny * jnp.maximum(jnp.abs(t), jnp.asarray(1.0, tdt))
+        h_use = jnp.where(live, jnp.clip(h, h_min, t_target - t),
+                          jnp.zeros((), tdt))
+        res = alf_step_batched(f, t, h_use, c["zq"], c["vq"], scale_exp,
+                               z0, targs)
+        z_f = lattice_decode(c["zq"], scale_exp, z0)
+        ratio = jax.vmap(
+            lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
+                res.err, z_f, res.z_next)                         # (B,)
+        accept = live & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+
+        t_new = t + h_use
+        hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
+            jnp.abs(t_target), jnp.asarray(1.0, tdt)))
+
+        # --- on accept: record each element's scalar grid row ----------
+        i_c = jnp.minimum(c["i"], max_steps - 1)
+        grid_t = c["grid_t"].at[rows, i_c].set(
+            jnp.where(accept, t, c["grid_t"][rows, i_c]))
+        grid_h = c["grid_h"].at[rows, i_c].set(
+            jnp.where(accept, h_use, c["grid_h"][rows, i_c]))
+        oi_val = jnp.where(hit, c["eval_idx"], jnp.full((B,), -1,
+                                                        jnp.int32))
+        grid_oi = c["grid_oi"].at[rows, i_c].set(
+            jnp.where(accept, oi_val, c["grid_oi"][rows, i_c]))
+
+        # --- on eval-time hit: record that element's decoded output ----
+        e_c = jnp.minimum(c["eval_idx"], n_eval - 1)
+        ys = jax.tree.map(
+            lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
+            c["ys"], res.z_next)
+
+        h_next = jnp.asarray(propose_stepsize(
+            cfg, h_use, ratio, c["prev_ratio"], ALF_ORDER), tdt)
+
+        return dict(
+            t=jnp.where(accept, t_new, t),
+            zq=_bwhere_tree(accept, res.zq_next, c["zq"]),
+            vq=_bwhere_tree(accept, res.vq_next, c["vq"]),
+            h=jnp.where(live, h_next, h),
+            prev_ratio=jnp.where(
+                accept, jnp.maximum(ratio, 1e-10), c["prev_ratio"]),
+            i=c["i"] + accept.astype(jnp.int32),
+            eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
+            trials=c["trials"] + live.astype(jnp.int32),
+            nfe=c["nfe"] + live.astype(jnp.int32),
+            ys=ys, grid_t=grid_t, grid_h=grid_h, grid_oi=grid_oi,
+        )
+
+    c = jax.lax.while_loop(cond, body, carry0)
+
+    grid = MaliGrid(t=c["grid_t"], h=c["grid_h"], out_idx=c["grid_oi"],
+                    n=c["i"], zT=c["zq"], vT=c["vq"], scale_exp=scale_exp)
+    stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
+                       overflow=c["eval_idx"] < n_eval)
+    return c["ys"], grid, stats

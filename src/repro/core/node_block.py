@@ -41,6 +41,13 @@ class NodeConfig:
     fused flat-state solver kernels; ``batch_axis`` turns on per-sample
     batched solving; ``checkpoint_segments`` bounds the ACA trajectory-
     checkpoint memory to K state snapshots per solve (see ``odeint``).
+
+    ``grad_method="mali"`` switches the block to the reversible
+    asynchronous-leapfrog integrator (O(1)-state-memory exact-reverse
+    gradients — ``solver`` is then forced to ``"alf"``, the only legal
+    pairing); it supports only the ``adaptive`` regime (the reversible
+    pair stepper has no fixed-grid mode) and no ``checkpoint_segments``
+    (there is nothing to segment).  See ``docs/method-selection.md``.
     """
     enabled: bool = False
     solver: str = "heun_euler"      # the paper trains with HeunEuler
@@ -81,6 +88,13 @@ def node_block_apply(
     def f(t, z, p):
         return block_fn(p, z, t)
 
+    if cfg.grad_method == "mali" and cfg.regime == "fixed":
+        raise ValueError(
+            "NodeConfig(grad_method='mali', regime='fixed'): the "
+            "reversible pair integrator is adaptive-only — use "
+            "regime='adaptive', or a fixed RK grid with aca/adjoint/"
+            "naive for static pod-scale schedules")
+
     if cfg.regime == "fixed":
         zT, _ = odeint_final(
             f, z0, cfg.t0, cfg.t1, (params,),
@@ -96,7 +110,9 @@ def node_block_apply(
     else:
         zT, _ = odeint_final(
             f, z0, cfg.t0, cfg.t1, (params,),
-            solver=cfg.solver,
+            # mali pairs only with the ALF pair integrator; the RK
+            # solver name in the config is a don't-care for that method
+            solver="alf" if cfg.grad_method == "mali" else cfg.solver,
             grad_method=cfg.grad_method,
             rtol=cfg.rtol, atol=cfg.atol,
             max_steps=cfg.max_steps,

@@ -47,6 +47,7 @@ from .integrate import (
     Checkpoints,
     SolveStats,
     _as_tuple,
+    _buffer_slot,
     _bwhere,
     adaptive_while_solve,
     batched_adaptive_while_solve,
@@ -169,10 +170,6 @@ def _aca_backward_sweep(
     # cotangent of ys[0] = z0 (identity path)
     lam = jax.tree.map(lambda l, g: l + g[0], lam, g_ys)
     return lam, gargs
-
-
-def _buffer_slot(buf: PyTree, i) -> PyTree:
-    return jax.tree.map(lambda b: b[i], buf)
 
 
 def _aca_backward_sweep_segmented(

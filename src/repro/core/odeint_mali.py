@@ -1,0 +1,333 @@
+"""MALI — reversible asynchronous-leapfrog gradients in O(1) state memory.
+
+The fourth gradient method of the paper-family matrix (MALI, Zhuang et
+al. 2021 — the ACA authors' successor; see also the symplectic-adjoint
+variant of Matsubara et al. 2021):
+
+Forward pass:
+  * integrate with the asynchronous-leapfrog (ALF) pair stepper
+    (``integrate.mali_adaptive_solve``): paired state (z, v), one field
+    evaluation per ψ trial, the same adaptive stepsize search as the RK
+    engines — structurally outside differentiation in the while_loop;
+  * keep **no state checkpoints at all**: only the accepted scalar grid
+    {t_i, h_i, out_idx_i} and the single terminal lattice pair
+    (z_N, v_N) — memory O(N_t) *scalars* + O(dim), versus ACA's
+    O(N_t · dim) trajectory checkpoint (segmented ACA's O(√N_t · dim)).
+
+Backward pass:
+  * walk the saved scalar grid in reverse; for each interval *invert*
+    the accepted ALF step from the current pair
+    (``stepper.alf_step_inverse``) — the pair is carried on a
+    fixed-point integer lattice, so the reconstructed (z_i, v_i) is the
+    forward pair **bitwise** (see the ALF section of ``stepper.py``);
+  * back-propagate through the differentiable float twin
+    ``alf_step_float`` linearized at the reconstructed pair with
+    ``jax.vjp``, carrying the adjoint pair (λ_z, λ_v) and accumulating
+    dL/dθ; output cotangents are injected where ``out_idx`` marks an
+    eval-time landing;
+  * close over the initial velocity: v_0 = f(t_0, z_0) routes λ_v's
+    remainder into dL/dz_0 and dL/dθ through one last vjp of f.
+
+Because the reverse reconstruction is exact, the gradient is the true
+discretize-then-optimize gradient of the forward map (up to the
+per-operation lattice quantum, which the straight-through float twin
+treats as identity — at or below one float ulp at the state's scale),
+with **no reverse-time re-integration drift** (the adjoint method's
+Theorem 3.2 pathology) and no per-step state storage (ACA's memory
+cost).  Each backward step costs one inverse ALF step plus one
+vjp-replayed float step ≈ 3 field evaluations.
+
+See ``docs/method-selection.md`` for where MALI wins and loses against
+aca / aca+segments / adjoint / naive.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .controller import ControllerConfig
+from .integrate import (
+    MaliGrid,
+    SolveStats,
+    _as_tuple,
+    _buffer_slot,
+    _bwhere_tree,
+    batched_mali_adaptive_solve,
+    mali_adaptive_solve,
+)
+from .stepper import (
+    alf_step_float,
+    alf_step_float_batched,
+    alf_step_inverse,
+    alf_step_inverse_batched,
+    lattice_decode,
+    maybe_flatten,
+    maybe_flatten_batched,
+)
+
+PyTree = Any
+
+
+def _mali_backward_sweep(
+    f: Callable,
+    grid: MaliGrid,
+    z0: PyTree,
+    args: PyTree,
+    g_ys: PyTree,
+    ts: jnp.ndarray,
+    use_pallas: bool = False,
+):
+    """Inverting reverse sweep from the terminal pair.
+
+    Returns (dL/dz0, dL/dargs).  ``g_ys`` are the output cotangents, one
+    slot per eval time, injected into λ_z where the grid's ``out_idx``
+    marks the landing.  No state buffer is read — each (z_i, v_i) is
+    reconstructed bitwise by ``alf_step_inverse`` before its local vjp.
+    """
+    targs = _as_tuple(args)
+    n_steps = grid.n
+
+    lam_z0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))
+    lam_v0 = jax.tree.map(jnp.zeros_like, lam_z0)
+    gargs0 = jax.tree.map(jnp.zeros_like, args)
+
+    def body(j, carry):
+        zq, vq, lam_z, lam_v, gargs = carry
+        i = n_steps - 1 - j
+        t_i, h_i, oi = grid.t[i], grid.h[i], grid.out_idx[i]
+
+        # inject the cotangent of any output landing on this interval's
+        # endpoint:  λ_z(t_{i+1}) += ∂J/∂y_k
+        def add_out(lam):
+            return jax.tree.map(lambda l, g: l + g[oi], lam, g_ys)
+
+        lam_z = jax.lax.cond(oi >= 0, add_out, lambda l: l, lam_z)
+
+        # exact reconstruction of the interval-start pair, then one
+        # local float vjp linearized at it (the local graph is freed
+        # each iteration — same depth profile as the ACA sweep)
+        zq_p, vq_p = alf_step_inverse(f, t_i, h_i, zq, vq,
+                                      grid.scale_exp, z0, targs)
+        z_p = lattice_decode(zq_p, grid.scale_exp, z0)
+        v_p = lattice_decode(vq_p, grid.scale_exp, z0)
+        _, vjp_fn = jax.vjp(
+            lambda z, v, a: alf_step_float(f, t_i, h_i, z, v,
+                                           _as_tuple(a),
+                                           use_pallas=use_pallas),
+            z_p, v_p, args)
+        dz, dv, da = vjp_fn((lam_z, lam_v))
+        gargs = jax.tree.map(jnp.add, gargs, da)
+        return (zq_p, vq_p, dz, dv, gargs)
+
+    _, _, lam_z, lam_v, gargs = jax.lax.fori_loop(
+        0, n_steps, body, (grid.zT, grid.vT, lam_z0, lam_v0, gargs0))
+
+    # initial-velocity closure: v0 = f(t0, z0) is part of the forward
+    # map, so λ_v's remainder flows into z0 and θ through f's vjp
+    _, vjp0 = jax.vjp(lambda z, a: f(ts[0], z, *_as_tuple(a)), z0, args)
+    dz_v, da_v = vjp0(lam_v)
+    dz0 = jax.tree.map(lambda l, d, g: l + d + g[0], lam_z, dz_v, g_ys)
+    gargs = jax.tree.map(jnp.add, gargs, da_v)
+    return dz0, gargs
+
+
+def _mali_backward_sweep_batched(
+    f: Callable,
+    grid: MaliGrid,
+    z0: PyTree,
+    args: PyTree,
+    g_ys: PyTree,
+    ts: jnp.ndarray,
+    use_pallas: bool = False,
+):
+    """Per-element inverting reverse sweep: each batch element unwinds
+    *its own* accepted grid from its own terminal pair.
+
+    Scalar grids are (B, S) rows, ``g_ys`` leaves (n_eval, B, ...).  The
+    shared ``fori_loop`` runs max(n_b) iterations; element b inverts its
+    step n_b − 1 − j at iteration j and is frozen once j ≥ n_b.  An
+    h = 0 ALF step is *not* the identity in v (the reflection still
+    fires), so — unlike the RK sweeps — freezing is pure masking: the
+    lattice pair is where-held (bit-stable integer select) and frozen
+    rows' incoming cotangents are zeroed before the vjp, so their
+    (finite) local Jacobians contribute exactly 0 to the shared dL/dθ.
+    Returns (dL/dz0 (B, ...), dL/dargs summed over the batch).
+    """
+    targs = _as_tuple(args)
+    n_steps = grid.n
+    B = n_steps.shape[0]
+    rows = jnp.arange(B)
+    hdt = grid.h.dtype
+    S = grid.t.shape[1]
+
+    lam_z0 = jax.tree.map(jnp.zeros_like, _buffer_slot(g_ys, 0))    # (B, ...)
+    lam_v0 = jax.tree.map(jnp.zeros_like, lam_z0)
+    gargs0 = jax.tree.map(jnp.zeros_like, args)
+    n_max = jnp.max(n_steps)
+
+    def body(j, carry):
+        zq, vq, lam_z, lam_v, gargs = carry
+        i = n_steps - 1 - j                  # (B,), negative when done
+        live = i >= 0
+        i_c = jnp.clip(i, 0, S - 1)
+        t_i = grid.t[rows, i_c]
+        h_i = jnp.where(live, grid.h[rows, i_c], jnp.zeros((), hdt))
+        oi = jnp.where(live, grid.out_idx[rows, i_c], -1)
+
+        # per-element output-cotangent injection at eval-time landings
+        oi_c = jnp.maximum(oi, 0)
+        lam_z = jax.tree.map(
+            lambda l, g: l + jnp.where(
+                (oi >= 0).reshape((-1,) + (1,) * (l.ndim - 1)),
+                g[oi_c, rows], jnp.zeros_like(l)),
+            lam_z, g_ys)
+
+        inv_z, inv_v = alf_step_inverse_batched(
+            f, t_i, h_i, zq, vq, grid.scale_exp, z0, targs)
+        zq = _bwhere_tree(live, inv_z, zq)
+        vq = _bwhere_tree(live, inv_v, vq)
+
+        z_p = lattice_decode(zq, grid.scale_exp, z0)
+        v_p = lattice_decode(vq, grid.scale_exp, z0)
+        # frozen rows: zero their incoming cotangents so the shared
+        # dargs accumulates exactly 0 from them (vjp is linear in the
+        # cotangent), then hold their λ through the write-back
+        zmask = lambda l: _bwhere_tree(live, l, jax.tree.map(
+            jnp.zeros_like, l))
+        _, vjp_fn = jax.vjp(
+            lambda z, v, a: alf_step_float_batched(
+                f, t_i, h_i, z, v, _as_tuple(a), use_pallas=use_pallas),
+            z_p, v_p, args)
+        dz, dv, da = vjp_fn((zmask(lam_z), zmask(lam_v)))
+        lam_z = _bwhere_tree(live, dz, lam_z)
+        lam_v = _bwhere_tree(live, dv, lam_v)
+        gargs = jax.tree.map(jnp.add, gargs, da)
+        return (zq, vq, lam_z, lam_v, gargs)
+
+    _, _, lam_z, lam_v, gargs = jax.lax.fori_loop(
+        0, n_max, body, (grid.zT, grid.vT, lam_z0, lam_v0, gargs0))
+
+    # initial-velocity closure, per element; args cotangent sums over
+    # the batch (shared parameters)
+    _, vjp0 = jax.vjp(
+        lambda z, a: jax.vmap(
+            lambda zi: f(ts[0], zi, *_as_tuple(a)))(z), z0, args)
+    dz_v, da_v = vjp0(lam_v)
+    dz0 = jax.tree.map(lambda l, d, g: l + d + g[0], lam_z, dz_v, g_ys)
+    gargs = jax.tree.map(jnp.add, gargs, da_v)
+    return dz0, gargs
+
+
+def odeint_mali(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    cfg: Optional[ControllerConfig] = None,
+    h0: Optional[jnp.ndarray] = None,
+    use_pallas: bool = False,
+) -> Tuple[PyTree, SolveStats]:
+    """Solve dz/dt = f(t, z, *args) with MALI gradients (O(1) state
+    memory, exact reverse reconstruction).
+
+    Returns (ys, stats) with ys stacked over ``ts`` (ys[0] = z0).
+    Differentiable w.r.t. ``z0`` and ``args``; ``ts`` is constant.  The
+    integrator is the 2nd-order asynchronous-leapfrog pair stepper —
+    there is no RK tableau to choose (``odeint`` exposes this as
+    ``solver="alf"``, the only pairing ``grad_method="mali"`` accepts).
+
+    ``use_pallas`` ravels the state once per solve (``maybe_flatten``
+    fallback rules apply) and runs the backward replay's half-drifts
+    through the fused ``rk_stage_increment`` kernel; the forward lattice
+    updates are single-pass elementwise integer arithmetic either way.
+    """
+    if cfg is None:
+        cfg = ControllerConfig()
+
+    f, z0, unravel, use_pallas = maybe_flatten(f, z0, use_pallas)
+
+    # ``ts`` threaded as an explicit custom_vjp argument (closures over
+    # trace-time values are illegal inside scan/grad), as in odeint_aca.
+    @jax.custom_vjp
+    def solve(z0, args, ts):
+        ys, _, stats = mali_adaptive_solve(
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
+        return ys, stats
+
+    def solve_fwd(z0, args, ts):
+        ys, grid, stats = mali_adaptive_solve(
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
+        return (ys, stats), (grid, z0, args, ts)
+
+    def solve_bwd(res, cot):
+        grid, z0, args, ts = res
+        g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
+        dz0, dargs = _mali_backward_sweep(
+            f, grid, z0, args, g_ys, ts, use_pallas=use_pallas)
+        return dz0, dargs, jnp.zeros_like(ts)
+
+    solve.defvjp(solve_fwd, solve_bwd)
+    ys, stats = solve(z0, args, ts)
+    if unravel is not None:
+        ys = jax.vmap(unravel)(ys)
+    return ys, stats
+
+
+def odeint_mali_batched(
+    f: Callable,
+    z0: PyTree,
+    ts: jnp.ndarray,
+    args: PyTree = (),
+    *,
+    rtol: float = 1e-6,
+    atol: float = 1e-6,
+    cfg: Optional[ControllerConfig] = None,
+    use_pallas: bool = False,
+) -> Tuple[PyTree, SolveStats]:
+    """Per-sample batched MALI: ``odeint(..., batch_axis=0,
+    grad_method="mali")``.
+
+    ``z0`` leaves carry a leading batch dim B and ``f`` is the
+    per-sample vector field.  Forward: ``batched_mali_adaptive_solve``
+    (per-element controllers, per-element scalar grids, per-element
+    lattices).  Backward: each element's grid is unwound by inverting
+    its own accepted steps from its own terminal pair — the per-element
+    discretize-then-optimize property holds with zero per-step state
+    storage, and outputs/grids match ``jax.vmap`` of the solo solver
+    (bit-equal in the tested configurations).  Returns (ys, stats) with
+    ys leaves (len(ts), B, ...) and per-element stats.
+    """
+    if cfg is None:
+        cfg = ControllerConfig()
+
+    f, z0, unravel, use_pallas = maybe_flatten_batched(f, z0, use_pallas)
+
+    @jax.custom_vjp
+    def solve(z0, args, ts):
+        ys, _, stats = batched_mali_adaptive_solve(
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg)
+        return ys, stats
+
+    def solve_fwd(z0, args, ts):
+        ys, grid, stats = batched_mali_adaptive_solve(
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg)
+        return (ys, stats), (grid, z0, args, ts)
+
+    def solve_bwd(res, cot):
+        grid, z0, args, ts = res
+        g_ys, _g_stats = cot
+        dz0, dargs = _mali_backward_sweep_batched(
+            f, grid, z0, args, g_ys, ts, use_pallas=use_pallas)
+        return dz0, dargs, jnp.zeros_like(ts)
+
+    solve.defvjp(solve_fwd, solve_bwd)
+    ys, stats = solve(z0, args, ts)
+    if unravel is not None:
+        ys = jax.vmap(jax.vmap(unravel))(ys)
+    return ys, stats

@@ -522,3 +522,338 @@ def fixed_step_fn(tab: Tableau, f: VecField) -> Callable:
     def step(t, z, h, args=()):
         return rk_step(tab, f, t, z, h, args).z_next
     return step
+
+
+# --------------------------------------------------------------------------
+# Asynchronous-leapfrog (ALF) stepper — the reversible pair integrator
+# behind ``odeint(..., grad_method="mali")``
+# --------------------------------------------------------------------------
+#
+# One ALF step advances the paired state (z, v), v ≈ dz/dt (MALI, Zhuang
+# et al. 2021):
+#
+#     u  = z + (h/2)·v           half-position drift
+#     w  = f(t + h/2, u)         one midpoint field evaluation
+#     v' = 2w − v                velocity reflection
+#     z' = u + (h/2)·v'          half-position drift with the NEW velocity
+#
+# (algebraically z' = z + h·w — second order, ONE f-eval per trial).  The
+# step is *algebraically* self-inverse: u = z' − (h/2)·v' recovers the
+# midpoint from the advanced pair, so the same w can be recomputed and the
+# whole step peeled off — the basis of MALI's O(1)-memory exact-reverse
+# gradient.
+#
+# Floating-point addition, however, is lossy (fl(fl(a+b)−b) ≠ a in
+# general: the map a ↦ fl(a+b) is not injective), so NO deterministic
+# float implementation of the algebraic inverse can be bit-exact.  To make
+# ψ⁻¹∘ψ the identity *bitwise* — the contract the MALI backward sweep is
+# built on — the pair is carried on a **fixed-point integer lattice**
+# (Levesque & Verlet 1993, "bit-reversible" integration): both z and v are
+# stored as int32/int64 multiples of a per-solve quantum
+# δ = 2^(scale_exp − frac), every drift/reflection update is a *wrapping
+# integer add* of an increment recomputed identically on both sides, and
+# integer addition is a bijection — the inverse subtracts the same
+# integers and recovers the previous pair exactly, for any input
+# (over/underflow included).  The field f is evaluated on the decoded
+# (float) midpoint; determinism of f gives bit-equal w in both directions.
+#
+# The quantization costs one δ-rounding per f-eval: δ is the state scale
+# × 2⁻²⁴ (f32/bf16 leaves, i32 lattice) or × 2⁻⁵² (f64 leaves, i64
+# lattice) — at or below one float ulp at the state's scale, far below
+# any solver tolerance this repo runs.  The differentiable twin
+# ``alf_step_float`` (the function the MALI backward sweep takes
+# ``jax.vjp`` of, linearized at the exactly-reconstructed states) treats
+# the δ-rounding as identity — the standard straight-through convention.
+
+ALF_ORDER = 2  # ALF is second order; embedded Euler comparator is order 1
+
+
+def _lattice_frac(fdt) -> int:
+    """Fractional bits of the lattice for a float leaf dtype: the quantum
+    is δ = 2^(scale_exp − frac)."""
+    return 52 if fdt == jnp.float64 else 24
+
+
+def _lattice_int_dtype(fdt):
+    return jnp.int64 if fdt == jnp.float64 else jnp.int32
+
+
+def _lattice_clip_bound(fdt) -> float:
+    # largest float of the lattice dtype that casts safely to the int
+    # dtype (2^31 / 2^63 themselves would overflow the cast)
+    return float(2 ** 62) if fdt == jnp.float64 else float(2 ** 31 - 128)
+
+
+def alf_lattice_exponent(z0: PyTree, v0: PyTree) -> jnp.ndarray:
+    """Per-solve lattice scale exponent: ⌈log₂ max(|z0|, |v0|, 1)⌉.
+
+    One float32 scalar shared by every leaf (the quantum is
+    δ_leaf = 2^(scale_exp − frac(dtype))); saved in the solve's grid so
+    the backward sweep decodes on the identical lattice.  The i32
+    lattice then spans ±128× the initial scale at a resolution of one
+    f32 ulp at that scale — states wandering far beyond the initial
+    scale wrap (deterministically; the error estimator rejects such
+    steps long before).
+    """
+    def leaf_max(l):
+        return jnp.max(jnp.abs(l.astype(jnp.float32))) if l.size else \
+            jnp.float32(0.0)
+
+    mx = jnp.asarray(1.0, jnp.float32)
+    for leaf in jax.tree.leaves(z0) + jax.tree.leaves(v0):
+        mx = jnp.maximum(mx, leaf_max(leaf))
+    return jnp.ceil(jnp.log2(mx))
+
+
+def alf_lattice_exponent_batched(z0: PyTree, v0: PyTree) -> jnp.ndarray:
+    """Per-element lattice exponents (B,) over batch-leading leaves —
+    the same reduction as ``alf_lattice_exponent`` restricted to each
+    row, so a batched solve quantizes exactly like ``jax.vmap`` of the
+    solo solve (per-row conditioning included)."""
+    def leaf_max(l):
+        flat = jnp.abs(l.astype(jnp.float32)).reshape(l.shape[0], -1)
+        return jnp.max(flat, axis=1) if l.size else \
+            jnp.zeros((l.shape[0],), jnp.float32)
+
+    leaves = jax.tree.leaves(z0) + jax.tree.leaves(v0)
+    mx = jnp.ones((leaves[0].shape[0],), jnp.float32)
+    for leaf in leaves:
+        mx = jnp.maximum(mx, leaf_max(leaf))
+    return jnp.ceil(jnp.log2(mx))
+
+
+def _se_b(scale_exp, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a scale exponent — scalar, or (B,) over batch-leading
+    leaves — to broadcast against ``leaf`` (the ``_hb`` convention)."""
+    se = jnp.asarray(scale_exp, jnp.float32)
+    return se.reshape(se.shape + (1,) * (leaf.ndim - se.ndim))
+
+
+def _lattice_quantize_leaf(x: jnp.ndarray, scale_exp) -> jnp.ndarray:
+    """Round a float leaf to its integer lattice coordinate (the ONE
+    quantization rule — forward and inverse must call exactly this)."""
+    fdt = x.dtype
+    inv_delta = jnp.exp2(
+        jnp.asarray(_lattice_frac(fdt), jnp.float32) - _se_b(scale_exp, x)
+    ).astype(fdt)
+    q = jnp.round(x * inv_delta)
+    lim = jnp.asarray(_lattice_clip_bound(fdt), fdt)
+    return jnp.clip(q, -lim, lim).astype(_lattice_int_dtype(fdt))
+
+
+def _lattice_decode_leaf(q: jnp.ndarray, scale_exp, fdt) -> jnp.ndarray:
+    delta = jnp.exp2(
+        _se_b(scale_exp, q) - jnp.asarray(_lattice_frac(fdt), jnp.float32)
+    ).astype(fdt)
+    return q.astype(fdt) * delta
+
+
+def lattice_encode(x: PyTree, scale_exp) -> PyTree:
+    """Float pytree -> integer-lattice pytree (i32 per f32/bf16 leaf,
+    i64 per f64 leaf), quantum δ = 2^(scale_exp − frac)."""
+    return jax.tree.map(lambda l: _lattice_quantize_leaf(l, scale_exp), x)
+
+
+def lattice_decode(q: PyTree, scale_exp, proto: PyTree) -> PyTree:
+    """Integer-lattice pytree -> float pytree with ``proto``'s leaf
+    dtypes (the exact inverse scaling of ``lattice_encode``'s grid)."""
+    return jax.tree.map(
+        lambda ql, pl: _lattice_decode_leaf(ql, scale_exp, pl.dtype),
+        q, proto)
+
+
+def _drift_increment(h, v_float: PyTree, scale_exp) -> PyTree:
+    """Quantized half-drift increment Q((h/2)·v), per leaf, as lattice
+    integers.  ``h`` may be scalar or (B,) over batch-leading leaves;
+    it is cast to each leaf's dtype (an x64 time grid must not promote
+    an f32 state — the ``_tree_axpy`` convention)."""
+    def leaf(v):
+        hh = _hb(h, v) * jnp.asarray(0.5, v.dtype)
+        return _lattice_quantize_leaf(hh * v, scale_exp)
+
+    return jax.tree.map(leaf, v_float)
+
+
+def _tree_iadd(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_isub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def _alf_midpoint_t(t, h):
+    """t + h/2 — defined once so forward and inverse compute the same
+    bits."""
+    return t + 0.5 * h
+
+
+class AlfResult(NamedTuple):
+    """One ALF trial over the lattice pair.
+
+    ``zq_next``/``vq_next`` are the advanced lattice coordinates (carry
+    them); ``z_next`` the decoded float state (outputs / error scale);
+    ``err`` the embedded error estimate h·(w − v) — the gap between the
+    2nd-order midpoint update z + h·w and the 1st-order Euler predictor
+    z + h·v, the zero-cost analog of an embedded RK pair.
+    """
+    zq_next: PyTree
+    vq_next: PyTree
+    z_next: PyTree
+    err: PyTree
+
+
+def alf_step(f: VecField, t, h, zq: PyTree, vq: PyTree, scale_exp,
+             proto: PyTree, args: Tuple = ()) -> AlfResult:
+    """One asynchronous-leapfrog step on the integer lattice.
+
+    ``zq``/``vq`` are lattice pytrees (``lattice_encode``), ``proto`` a
+    float pytree fixing the leaf dtypes, ``t``/``h`` scalars.  Every
+    state update is a wrapping integer add, so
+    ``alf_step_inverse(alf_step(s)) == s`` **bitwise** for any state —
+    see the section comment.  Exactly one f evaluation.
+    """
+    vf = lattice_decode(vq, scale_exp, proto)
+    uq = _tree_iadd(zq, _drift_increment(h, vf, scale_exp))
+    uf = lattice_decode(uq, scale_exp, proto)
+    w = f(_alf_midpoint_t(t, h), uf, *args)
+    # velocity reflection v' = 2w − v on the lattice (Q(2w) exact int sub)
+    vq_next = _tree_isub(
+        jax.tree.map(
+            lambda wl: _lattice_quantize_leaf(
+                jnp.asarray(2.0, wl.dtype) * wl, scale_exp), w),
+        vq)
+    vf_next = lattice_decode(vq_next, scale_exp, proto)
+    zq_next = _tree_iadd(uq, _drift_increment(h, vf_next, scale_exp))
+    err = jax.tree.map(
+        lambda wl, vl: _hb(h, vl) * (wl.astype(vl.dtype) - vl), w, vf)
+    return AlfResult(zq_next=zq_next, vq_next=vq_next,
+                     z_next=lattice_decode(zq_next, scale_exp, proto),
+                     err=err)
+
+
+def alf_step_inverse(f: VecField, t, h, zq_next: PyTree, vq_next: PyTree,
+                     scale_exp, proto: PyTree,
+                     args: Tuple = ()) -> Tuple[PyTree, PyTree]:
+    """Exact inverse of ``alf_step``: recovers the pre-step pair bitwise.
+
+    Mirrors the forward update in reverse: each quantized increment is
+    recomputed from the side the inverse already knows (v' for the
+    second drift, the recovered v for the first) and subtracted with the
+    same wrapping integer arithmetic — ints in, identical ints out.
+    """
+    vf_next = lattice_decode(vq_next, scale_exp, proto)
+    uq = _tree_isub(zq_next, _drift_increment(h, vf_next, scale_exp))
+    uf = lattice_decode(uq, scale_exp, proto)
+    w = f(_alf_midpoint_t(t, h), uf, *args)
+    vq = _tree_isub(
+        jax.tree.map(
+            lambda wl: _lattice_quantize_leaf(
+                jnp.asarray(2.0, wl.dtype) * wl, scale_exp), w),
+        vq_next)
+    vf = lattice_decode(vq, scale_exp, proto)
+    zq = _tree_isub(uq, _drift_increment(h, vf, scale_exp))
+    return zq, vq
+
+
+def alf_step_float(f: VecField, t, h, z: PyTree, v: PyTree,
+                   args: Tuple = (), *,
+                   use_pallas: bool = False) -> Tuple[PyTree, PyTree]:
+    """Differentiable float twin of ``alf_step`` (δ-rounding treated as
+    identity — the straight-through convention).
+
+    The MALI backward sweep takes ``jax.vjp`` of this map at the
+    exactly-reconstructed (z_i, v_i); its primal differs from the
+    lattice step by at most one quantum per operation.  With
+    ``use_pallas`` and a flat (N,) state the two half-drifts reuse the
+    fused ``rk_stage_increment`` kernel (a one-stage row with weight ½,
+    already custom_vjp wrapped); the reflection is one cheap jnp axpy.
+    """
+    if use_pallas and _is_flat_array(z):
+        from repro.kernels import ops
+        u = ops.rk_stage_increment(z, v[None], h, (0.5,))
+        w = f(_alf_midpoint_t(t, h), u, *args)
+        v_next = 2.0 * w - v
+        z_next = ops.rk_stage_increment(u, v_next[None], h, (0.5,))
+        return z_next, v_next
+    half = jax.tree.map(lambda vl: 0.5 * vl, v)
+    u = _tree_axpy(h, half, z)
+    w = f(_alf_midpoint_t(t, h), u, *args)
+    v_next = jax.tree.map(lambda wl, vl: 2.0 * wl - vl, w, v)
+    z_next = _tree_axpy(h, jax.tree.map(lambda vl: 0.5 * vl, v_next), u)
+    return z_next, v_next
+
+
+def alf_step_batched(f: VecField, t: jnp.ndarray, h: jnp.ndarray,
+                     zq: PyTree, vq: PyTree, scale_exp, proto: PyTree,
+                     args: Tuple = ()) -> AlfResult:
+    """Per-sample batched ALF trial: leaves carry a leading batch dim B,
+    ``t``/``h`` are (B,) — each element drifts with its own stepsize.
+
+    Same lattice arithmetic as ``alf_step`` (the increments broadcast
+    h per row), so per-row inversion is bitwise exact.  Callers gate the
+    carry on per-row accept masks (integer ``where`` is bit-stable);
+    a frozen row's trial is simply discarded — note the h = 0 ALF step
+    is *not* the identity in v (the reflection still fires), so masking,
+    not zero-stepping, is the freezing contract here.
+    """
+    fb = jax.vmap(lambda ti, zi: f(ti, zi, *args))
+    vf = lattice_decode(vq, scale_exp, proto)
+    uq = _tree_iadd(zq, _drift_increment(h, vf, scale_exp))
+    uf = lattice_decode(uq, scale_exp, proto)
+    w = fb(_alf_midpoint_t(t, h), uf)
+    vq_next = _tree_isub(
+        jax.tree.map(
+            lambda wl: _lattice_quantize_leaf(
+                jnp.asarray(2.0, wl.dtype) * wl, scale_exp), w),
+        vq)
+    vf_next = lattice_decode(vq_next, scale_exp, proto)
+    zq_next = _tree_iadd(uq, _drift_increment(h, vf_next, scale_exp))
+    err = jax.tree.map(
+        lambda wl, vl: _hb(h, vl) * (wl.astype(vl.dtype) - vl), w, vf)
+    return AlfResult(zq_next=zq_next, vq_next=vq_next,
+                     z_next=lattice_decode(zq_next, scale_exp, proto),
+                     err=err)
+
+
+def alf_step_inverse_batched(
+        f: VecField, t: jnp.ndarray, h: jnp.ndarray, zq_next: PyTree,
+        vq_next: PyTree, scale_exp, proto: PyTree,
+        args: Tuple = ()) -> Tuple[PyTree, PyTree]:
+    """Batched twin of ``alf_step_inverse`` (per-row t/h)."""
+    fb = jax.vmap(lambda ti, zi: f(ti, zi, *args))
+    vf_next = lattice_decode(vq_next, scale_exp, proto)
+    uq = _tree_isub(zq_next, _drift_increment(h, vf_next, scale_exp))
+    uf = lattice_decode(uq, scale_exp, proto)
+    w = fb(_alf_midpoint_t(t, h), uf)
+    vq = _tree_isub(
+        jax.tree.map(
+            lambda wl: _lattice_quantize_leaf(
+                jnp.asarray(2.0, wl.dtype) * wl, scale_exp), w),
+        vq_next)
+    vf = lattice_decode(vq, scale_exp, proto)
+    zq = _tree_isub(uq, _drift_increment(h, vf, scale_exp))
+    return zq, vq
+
+
+def alf_step_float_batched(
+        f: VecField, t: jnp.ndarray, h: jnp.ndarray, z: PyTree,
+        v: PyTree, args: Tuple = (), *,
+        use_pallas: bool = False) -> Tuple[PyTree, PyTree]:
+    """Batched differentiable float twin (per-row t/h); with
+    ``use_pallas`` and a (B, N) state the drifts reuse the fused
+    ``rk_stage_increment_batched`` kernel."""
+    fb = jax.vmap(lambda ti, zi: f(ti, zi, *args))
+    if use_pallas and _is_flat_batched(z):
+        from repro.kernels import ops
+        u = ops.rk_stage_increment_batched(z, v[None], h, (0.5,))
+        w = fb(_alf_midpoint_t(t, h), u)
+        v_next = 2.0 * w - v
+        z_next = ops.rk_stage_increment_batched(u, v_next[None], h, (0.5,))
+        return z_next, v_next
+    half = jax.tree.map(lambda vl: 0.5 * vl, v)
+    u = _tree_baxpy(h, half, z)
+    w = fb(_alf_midpoint_t(t, h), u)
+    v_next = jax.tree.map(lambda wl, vl: 2.0 * wl - vl, w, v)
+    z_next = _tree_baxpy(h, jax.tree.map(lambda vl: 0.5 * vl, v_next), u)
+    return z_next, v_next

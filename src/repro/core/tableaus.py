@@ -221,24 +221,35 @@ _REGISTRY = {
 }
 # aliases matching the paper's naming
 _REGISTRY["rk23"] = BOGACKI_SHAMPINE
+_REGISTRY["bogacki_shampine"] = BOGACKI_SHAMPINE
 _REGISTRY["rk45"] = DOPRI5
 _REGISTRY["heuneuler"] = HEUN_EULER
 
-FIXED_SOLVERS = ("euler", "midpoint", "rk2", "rk4")
-ADAPTIVE_SOLVERS = ("heun_euler", "bosh3", "dopri5")
+# derived from the registry (aliases included) so these tuples — and the
+# get_tableau error message built from them — cannot drift from what the
+# lookup actually accepts (a hardcoded list once missed rk45/heuneuler)
+FIXED_SOLVERS = tuple(sorted(
+    n for n, t in _REGISTRY.items() if not t.adaptive))
+ADAPTIVE_SOLVERS = tuple(sorted(
+    n for n, t in _REGISTRY.items() if t.adaptive))
 
 
 def get_tableau(name: str) -> Tableau:
     """Look up a registered tableau by case/dash-insensitive name.
 
-    Accepted names: euler, midpoint, rk2/heun2, rk4 (fixed) and
-    heun_euler, bosh3/rk23/bogacki_shampine, dopri5/rk45 (adaptive).
-    Raises KeyError listing the registry for unknown names.
+    Accepted names are exactly ``FIXED_SOLVERS`` + ``ADAPTIVE_SOLVERS``
+    (both derived from the registry, aliases included).  Raises KeyError
+    enumerating them for unknown names.  The reversible pair integrator
+    (``odeint(solver="alf", grad_method="mali")``) is not an RK tableau
+    and is dispatched at the ``api`` level, not here.
     """
     key = name.lower().replace("-", "_")
     if key not in _REGISTRY:
         raise KeyError(
-            f"unknown solver {name!r}; available: {sorted(_REGISTRY)}")
+            f"unknown solver {name!r}; fixed-step: "
+            f"{', '.join(FIXED_SOLVERS)}; adaptive: "
+            f"{', '.join(ADAPTIVE_SOLVERS)} (the reversible pair "
+            "integrator is solver='alf' with grad_method='mali')")
     return _REGISTRY[key]
 
 

@@ -74,6 +74,9 @@ def test_interpolate_ts_cuts_trials_on_dense_grid():
 def test_interpolated_multi_time_gradient_analytic(method):
     """Cotangents of interpolated outputs flow correctly: dL/dz0 of
     L = Σ_k z(t_k)² matches 2 z0 Σ e^{2 t_k} under every method."""
+    if method == "mali":
+        pytest.skip("interpolate_ts is not supported under mali "
+                    "(odeint raises; see docs/method-selection.md)")
     ts = jnp.linspace(0.0, 1.0, 9)
 
     def loss(z0):
@@ -115,6 +118,9 @@ def _interp_case(method, use_pallas, batched, interpolate, **kw):
 def test_interpolated_close_to_landed(method, batched):
     """Interpolated outputs sit within tolerance-scale distance of the
     forced-landing solve, and gradients agree to matching precision."""
+    if method == "mali":
+        pytest.skip("interpolate_ts is not supported under mali "
+                    "(odeint raises; see docs/method-selection.md)")
     ys0, g0, st0 = _interp_case(method, False, batched, False)
     ys1, g1, st1 = _interp_case(method, False, batched, True)
     np.testing.assert_allclose(ys1, ys0, atol=5e-4)
@@ -132,6 +138,9 @@ def test_interpolate_pallas_parity(method, batched, _interpret_kernels):
     bit-equal endpoint states; interior interpolant reads may differ by
     a few ulp of the coefficient scale (XLA fuses the polynomial-eval
     chains differently per program), gradients to ≤1e-5 rel."""
+    if method == "mali":
+        pytest.skip("interpolate_ts is not supported under mali "
+                    "(odeint raises; see docs/method-selection.md)")
     if jax.config.jax_enable_x64:
         pytest.skip("pallas kernels are f32; x64 pytree math diverges "
                     "by design (same policy as the grad-suite parity "

@@ -18,6 +18,8 @@ K, T = 2.0, 1.0
 
 
 def _toy_grad(method, solver="dopri5", **kw):
+    if method == "mali":
+        solver = None  # the ALF pair integrator; no RK tableau
     def loss(z0):
         ys, _ = odeint(lambda t, z, k: k * z, z0, jnp.array([0.0, T]),
                        (jnp.float32(K),), solver=solver,
@@ -32,13 +34,18 @@ def _toy_grad(method, solver="dopri5", **kw):
 
 @pytest.mark.parametrize("method", GRAD_METHODS)
 def test_toy_gradient_matches_analytic(method):
-    g, analytic = _toy_grad(method, rtol=1e-6, atol=1e-6)
+    # mali's 2nd-order pair stepper needs a larger accepted-step budget
+    # at this tolerance (1st-order embedded estimate)
+    kw = dict(max_steps=8192) if method == "mali" else {}
+    g, analytic = _toy_grad(method, rtol=1e-6, atol=1e-6, **kw)
     assert abs(g - analytic) / analytic < 1e-4, (method, g, analytic)
 
 
 @pytest.mark.parametrize("method", GRAD_METHODS)
 @pytest.mark.parametrize("solver", ["euler", "rk2", "rk4"])
 def test_fixed_grid_gradient(method, solver):
+    if method == "mali":
+        pytest.skip("the reversible pair integrator is adaptive-only")
     g, analytic = _toy_grad(method, solver=solver, steps_per_interval=64)
     tol = 0.2 if solver == "euler" else 5e-3
     assert abs(g - analytic) / analytic < tol, (method, solver, g)
@@ -103,13 +110,18 @@ def test_pytree_state_and_param_grads():
     for m in GRAD_METHODS:
         def loss(w):
             ys, _ = odeint(f, z0, jnp.array([0.0, 1.0]), (w,),
-                           solver="heun_euler", grad_method=m,
-                           rtol=1e-5, atol=1e-5)
+                           solver=None if m == "mali" else "heun_euler",
+                           grad_method=m, rtol=1e-5, atol=1e-5,
+                           max_steps=2048 if m == "mali" else 256)
             return sum(jnp.sum(v[-1] ** 2) for v in ys.values())
         grads[m] = jax.grad(loss)(w)
     np.testing.assert_allclose(grads["aca"], grads["naive"],
                                rtol=1e-3, atol=1e-5)
     np.testing.assert_allclose(grads["aca"], grads["adjoint"],
+                               rtol=2e-2, atol=1e-3)
+    # mali differentiates its own (ALF) discretization: agreement at
+    # solve-tolerance scale, like the adjoint comparison
+    np.testing.assert_allclose(grads["aca"], grads["mali"],
                                rtol=2e-2, atol=1e-3)
 
 
@@ -121,8 +133,13 @@ def test_multi_time_outputs_latent_ode_style():
         return k * z
 
     def loss(z0, method):
-        ys, _ = odeint(f, z0, ts, (jnp.float32(1.0),), solver="dopri5",
-                       grad_method=method, rtol=1e-7, atol=1e-7)
+        mali = method == "mali"
+        ys, _ = odeint(f, z0, ts, (jnp.float32(1.0),),
+                       solver=None if mali else "dopri5",
+                       grad_method=method,
+                       rtol=1e-6 if mali else 1e-7,
+                       atol=1e-6 if mali else 1e-7,
+                       max_steps=8192 if mali else 256)
         return jnp.sum(ys ** 2)
 
     # analytic: sum_i z0^2 e^{2 t_i}; d/dz0 = 2 z0 sum e^{2 t_i}
@@ -143,9 +160,13 @@ def test_grad_methods_inside_scan():
     z0 = jax.random.normal(jax.random.PRNGKey(1), (4,))
 
     for m in GRAD_METHODS:
-        for solver, kw in [("rk2", dict(steps_per_interval=2)),
-                           ("heun_euler",
-                            dict(rtol=1e-3, atol=1e-3, max_steps=32))]:
+        if m == "mali":
+            cases = [(None, dict(rtol=1e-3, atol=1e-3, max_steps=64))]
+        else:
+            cases = [("rk2", dict(steps_per_interval=2)),
+                     ("heun_euler",
+                      dict(rtol=1e-3, atol=1e-3, max_steps=32))]
+        for solver, kw in cases:
             def block(z, p):
                 zT, _ = odeint_final(f, z, 0.0, 1.0, (p,), solver=solver,
                                      grad_method=m, **kw)
@@ -193,6 +214,12 @@ def test_pallas_parity_adaptive(method, solver, _interpret_kernels):
     pytree path bit-for-bit on the forward trajectory — same accepted
     grid, same accept/reject decisions — and match its gradients."""
     kw = dict(rtol=1e-5, atol=1e-5, max_steps=64)
+    if method == "mali":
+        if solver != "dopri5":
+            pytest.skip("mali has no RK tableau — one parity case "
+                        "suffices")
+        solver = None
+        kw["max_steps"] = 2048  # 2nd-order pair stepper at 1e-5
     ys0, g0 = _parity_case(method, solver, False, **kw)
     ys1, g1 = _parity_case(method, solver, True, **kw)
     np.testing.assert_array_equal(ys0, ys1)
@@ -202,6 +229,8 @@ def test_pallas_parity_adaptive(method, solver, _interpret_kernels):
 @pytest.mark.parametrize("method", GRAD_METHODS)
 @pytest.mark.parametrize("solver", ["rk4", "rk2"])
 def test_pallas_parity_fixed_grid(method, solver, _interpret_kernels):
+    if method == "mali":
+        pytest.skip("the reversible pair integrator is adaptive-only")
     kw = dict(steps_per_interval=8)
     ys0, g0 = _parity_case(method, solver, False, **kw)
     ys1, g1 = _parity_case(method, solver, True, **kw)
@@ -220,9 +249,11 @@ def test_pallas_parity_pytree_state(method, _interpret_kernels):
     w = jax.random.normal(jax.random.PRNGKey(0), (4, 4)) * 0.3
 
     def loss(w, up):
+        mali = method == "mali"
         ys, _ = odeint(f, z0, jnp.array([0.0, 1.0]), (w,),
-                       solver="dopri5", grad_method=method,
-                       rtol=1e-5, atol=1e-5, use_pallas=up)
+                       solver=None if mali else "dopri5",
+                       grad_method=method, rtol=1e-5, atol=1e-5,
+                       max_steps=2048 if mali else 256, use_pallas=up)
         return sum(jnp.sum(v[-1] ** 2) for v in ys.values()), ys
 
     (_, ys0), g0 = jax.value_and_grad(lambda w: loss(w, False),
@@ -230,8 +261,17 @@ def test_pallas_parity_pytree_state(method, _interpret_kernels):
     (_, ys1), g1 = jax.value_and_grad(lambda w: loss(w, True),
                                       has_aux=True)(w)
     for k in ys0:
-        np.testing.assert_array_equal(np.asarray(ys0[k]),
-                                      np.asarray(ys1[k]))
+        if method == "mali":
+            # the lattice quantize runs on differently-shaped arrays
+            # (per-leaf vs raveled) whose XLA fusion may differ by an
+            # ulp -> a few quanta, not bitwise, across the ravel
+            # boundary (each path is individually bit-reversible)
+            np.testing.assert_allclose(np.asarray(ys0[k]),
+                                       np.asarray(ys1[k]),
+                                       rtol=0, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(ys0[k]),
+                                          np.asarray(ys1[k]))
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
                                rtol=1e-5, atol=1e-7)
 

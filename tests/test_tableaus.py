@@ -65,5 +65,28 @@ def test_fsal_flags():
 def test_registry_aliases():
     assert get_tableau("rk45") is get_tableau("dopri5")
     assert get_tableau("rk23") is get_tableau("bosh3")
+    assert get_tableau("bogacki_shampine") is get_tableau("bosh3")
+    assert get_tableau("heuneuler") is get_tableau("heun_euler")
     with pytest.raises(KeyError):
         get_tableau("nope")
+
+
+def test_solver_groups_cover_registry():
+    """FIXED_SOLVERS/ADAPTIVE_SOLVERS are derived from the registry —
+    aliases included — so they cannot drift from what get_tableau
+    accepts."""
+    assert set(FIXED_SOLVERS) | set(ADAPTIVE_SOLVERS) == set(_REGISTRY)
+    assert {"rk45", "rk23", "heuneuler", "bogacki_shampine"} <= set(
+        ADAPTIVE_SOLVERS)
+    assert all(not _REGISTRY[n].adaptive for n in FIXED_SOLVERS)
+    assert all(_REGISTRY[n].adaptive for n in ADAPTIVE_SOLVERS)
+
+
+def test_unknown_solver_error_enumerates_accepted_names():
+    """The error message is built from the derived groups: every
+    accepted name — aliases like rk45/heuneuler included — appears."""
+    with pytest.raises(KeyError) as ei:
+        get_tableau("does_not_exist")
+    msg = str(ei.value)
+    for name in FIXED_SOLVERS + ADAPTIVE_SOLVERS:
+        assert name in msg, f"{name} missing from: {msg}"

@@ -120,6 +120,10 @@ def _reverse_case(method, use_pallas, batched):
     z0 = jax.random.normal(jax.random.PRNGKey(1), (6,))
     kw = dict(solver="dopri5", grad_method=method, rtol=1e-6, atol=1e-6,
               max_steps=128, use_pallas=use_pallas)
+    if method == "mali":
+        # the ALF pair integrator: no RK tableau; 2nd order with a
+        # 1st-order embedded estimate -> larger step budget
+        kw.update(solver=None, max_steps=4096)
     if batched:
         z0 = jnp.stack([z0, 1.5 * z0, -0.5 * z0])
         kw["batch_axis"] = 0

@@ -1,11 +1,13 @@
 """Docs health check, run by the CI docs job.
 
-Two gates:
+Three gates over ``README.md`` + ``docs/**/*.md``:
 
-1. every relative link in ``README.md`` and ``docs/**/*.md`` resolves to
-   an existing file (anchors are stripped; absolute http(s)/mailto links
-   are skipped);
-2. every public symbol exported by ``repro.core`` (its ``__all__``) has a
+1. every relative link resolves to an existing file (anchors are
+   stripped; absolute http(s)/mailto links are skipped);
+2. every fenced ```python code block parses (``compile()`` smoke — no
+   execution), so documented snippets cannot silently rot into syntax
+   errors as the API evolves;
+3. every public symbol exported by ``repro.core`` (its ``__all__``) has a
    real docstring — the auto-generated ``Name(field, ...)`` signature
    docstring of dataclasses/NamedTuples does not count.
 
@@ -26,12 +28,17 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 # [text](target) — excluding images' extra ! is fine (same rule applies)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _SKIP = ("http://", "https://", "mailto:")
+# fenced python blocks; tolerate info-string suffixes like ``python doctest``
+_PY_FENCE = re.compile(r"^```python[^\n]*\n(.*?)^```", re.M | re.S)
+
+
+def _md_files() -> list:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").rglob("*.md"))
 
 
 def check_links() -> list:
     errors = []
-    md_files = [ROOT / "README.md"] + sorted((ROOT / "docs").rglob("*.md"))
-    for md in md_files:
+    for md in _md_files():
         if not md.exists():
             errors.append(f"{md.relative_to(ROOT)}: file missing")
             continue
@@ -44,6 +51,26 @@ def check_links() -> list:
             if not resolved.exists():
                 errors.append(
                     f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def check_snippets() -> list:
+    """Syntax-check every fenced ```python block (compile only — no
+    execution, no imports resolved)."""
+    errors = []
+    for md in _md_files():
+        if not md.exists():
+            continue  # check_links already reports the missing file
+        text = md.read_text()
+        for m in _PY_FENCE.finditer(text):
+            lineno = text.count("\n", 0, m.start()) + 2  # first code line
+            where = f"{md.relative_to(ROOT)}:{lineno}"
+            try:
+                compile(m.group(1), where, "exec")
+            except SyntaxError as e:
+                errors.append(
+                    f"{where}: python snippet does not parse "
+                    f"(line {e.lineno} of block: {e.msg})")
     return errors
 
 
@@ -73,12 +100,12 @@ def check_docstrings() -> list:
 
 
 def main() -> int:
-    errors = check_links() + check_docstrings()
+    errors = check_links() + check_snippets() + check_docstrings()
     for e in errors:
         print(f"FAIL {e}")
     if errors:
         return 1
-    print("docs check OK (links + public docstrings)")
+    print("docs check OK (links + python snippets + public docstrings)")
     return 0
 
 
