@@ -13,10 +13,11 @@ import time
 import traceback
 
 from . import (bench_batched_solve, bench_classification,
-               bench_dense_eval, bench_mali_memory, bench_memory,
-               bench_method_costs, bench_node_lm, bench_reliability,
-               bench_reverse_error, bench_solver_robustness,
-               bench_threebody, bench_timeseries, bench_toy_gradient)
+               bench_dense_eval, bench_failure_overhead,
+               bench_mali_memory, bench_memory, bench_method_costs,
+               bench_node_lm, bench_reliability, bench_reverse_error,
+               bench_solver_robustness, bench_threebody,
+               bench_timeseries, bench_toy_gradient)
 from .common import emit
 
 BENCHES = [
@@ -33,6 +34,8 @@ BENCHES = [
     ("memory (beyond-paper: segmented ACA)", bench_memory.run),
     ("dense_eval (beyond-paper: interpolate_ts)", bench_dense_eval.run),
     ("mali_memory (beyond-paper: reversible MALI)", bench_mali_memory.run),
+    ("failure_overhead (solve-health guard gate)",
+     bench_failure_overhead.run),
 ]
 
 
@@ -42,7 +45,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    failures = 0
+    failed = []
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -53,10 +56,16 @@ def main() -> None:
             emit(f"bench_runtime_s/{name.split(' ')[0]}",
                  f"{time.monotonic() - t0:.1f}", "")
         except Exception:
-            failures += 1
+            # per-bench isolation: one crashing bench reports and the
+            # suite continues; the summary + exit code carry the failure
+            failed.append(name)
             traceback.print_exc()
-    if failures:
-        raise SystemExit(f"{failures} benchmarks failed")
+            emit(f"bench_failed/{name.split(' ')[0]}", "1", "")
+    if failed:
+        print(f"# {len(failed)} benchmark(s) failed: "
+              + ", ".join(failed), flush=True)
+        raise SystemExit(f"{len(failed)} benchmarks failed: "
+                         + ", ".join(n.split(" ")[0] for n in failed))
 
 
 if __name__ == "__main__":

@@ -7,19 +7,26 @@ Public API:
     node_block_apply / NodeConfig — continuous-depth blocks for model stacks
     get_tableau / Tableau — explicit RK solvers (Euler..Dopri5);
         solver="alf" is the reversible pair integrator of "mali"
+    SolveStatus / odeint_checked / solve_with_fallback — solve-health
+        status codes, raising wrapper, host-level retry ladder
+        (docs/robustness.md)
 """
 
 from .api import (
     DenseSolution,
     GRAD_METHODS,
+    default_fallback_ladder,
     odeint,
+    odeint_checked,
     odeint_dense,
     odeint_final,
+    solve_with_fallback,
 )
 from .controller import ControllerConfig
 from .integrate import (
     Checkpoints,
     SolveStats,
+    SolveStatus,
     adaptive_while_solve,
     batched_adaptive_while_solve,
     fixed_grid_solve,
@@ -53,7 +60,8 @@ from .tableaus import (
 __all__ = [
     "odeint", "odeint_final", "odeint_dense", "DenseSolution",
     "GRAD_METHODS",
-    "ControllerConfig", "SolveStats", "Checkpoints",
+    "odeint_checked", "solve_with_fallback", "default_fallback_ladder",
+    "ControllerConfig", "SolveStats", "SolveStatus", "Checkpoints",
     "adaptive_while_solve", "batched_adaptive_while_solve",
     "fixed_grid_solve",
     "NodeConfig", "node_block_apply",

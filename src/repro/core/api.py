@@ -11,7 +11,9 @@
                        use_pallas=False,         # fused flat-state kernels
                        batch_axis=None,          # per-sample batched solve
                        checkpoint_segments=None, # O(K)-state ACA memory
-                       interpolate_ts=False)     # dense-output eval reads
+                       interpolate_ts=False,     # dense-output eval reads
+                       h0=None,                  # initial-stepsize override
+                       on_failure="status")      # solve-health policy
 
 ``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` strictly
 monotone — ascending for a forward solve, or *descending* for a
@@ -44,9 +46,15 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 
 from .controller import ControllerConfig
-from .integrate import SolveStats, _as_tuple, adaptive_while_solve
+from .integrate import (
+    SolveStats,
+    SolveStatus,
+    _as_tuple,
+    adaptive_while_solve,
+)
 from .odeint_aca import odeint_aca, odeint_aca_batched, odeint_aca_fixed
 from .odeint_adjoint import (
     odeint_adjoint,
@@ -65,6 +73,38 @@ from .tableaus import Tableau, get_tableau
 PyTree = Any
 
 GRAD_METHODS = ("aca", "adjoint", "naive", "mali")
+
+ON_FAILURE_POLICIES = ("status", "warn", "raise")
+
+
+def _apply_on_failure(ys, stats, on_failure: str):
+    """Apply the solve-health policy to a finished solve.
+
+    ``"status"`` is a no-op (callers read ``stats.status``); ``"warn"``
+    emits a ``jax.debug.print`` line when any element failed (works
+    under jit — the print fires at run time, off the hot path behind a
+    ``lax.cond``); ``"raise"`` inserts a functionalized
+    ``checkify.check`` — eager callers get an immediate exception,
+    jitted callers must functionalize with ``checkify.checkify`` (see
+    ``odeint_checked``, which does exactly that).
+    """
+    if on_failure == "status":
+        return ys, stats
+    any_bad = jnp.any(stats.status != SolveStatus.OK)
+    if on_failure == "warn":
+        jax.lax.cond(
+            any_bad,
+            lambda s: jax.debug.print(
+                "odeint: solve-health failure, status={s} "
+                "(see repro.core.SolveStatus.describe)", s=s),
+            lambda s: None,
+            stats.status)
+        return ys, stats
+    checkify.check(
+        ~any_bad,
+        "odeint: solve failed, status={s} "
+        "(see repro.core.SolveStatus.describe)", s=stats.status)
+    return ys, stats
 
 
 def _is_alf(solver) -> bool:
@@ -126,8 +166,23 @@ def odeint(
     batch_axis: Optional[int] = None,
     checkpoint_segments: Optional[Union[int, str]] = None,
     interpolate_ts: bool = False,
+    h0: Optional[Any] = None,
+    on_failure: str = "status",
 ) -> Tuple[PyTree, SolveStats]:
     """See module docstring for the solver × grad-method matrix.
+
+    Solve health: adaptive solves guard every trial against non-finite
+    states — a poisoned element freezes at its last accepted state
+    (finite outputs, zeroed cotangents) and ``stats.status`` carries a
+    per-solve (per-element under ``batch_axis``) ``SolveStatus`` code.
+    ``on_failure`` picks the policy: ``"status"`` (default — report
+    only, bit-identical hot path), ``"warn"`` (``jax.debug.print`` on
+    failure), ``"raise"`` (a ``checkify.check``; eager calls raise
+    immediately, jitted callers use ``odeint_checked``).  ``h0``
+    overrides the automatic initial-stepsize heuristic of adaptive
+    solvers (scalar, or (B,) under ``batch_axis``) — the
+    ``solve_with_fallback`` retry ladder uses it to re-attempt a failed
+    solve with a tighter first step.  See ``docs/robustness.md``.
 
     Adaptive-solver budgets: ``max_steps`` caps the number of *accepted*
     steps (it is also the checkpoint-buffer capacity, the paper's N_t
@@ -214,6 +269,10 @@ def odeint(
     """
     if grad_method not in GRAD_METHODS:
         raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
+    if on_failure not in ON_FAILURE_POLICIES:
+        raise ValueError(
+            f"on_failure must be one of {ON_FAILURE_POLICIES}; got "
+            f"{on_failure!r}")
     if solver is None:
         # mali integrates with the reversible ALF pair stepper; every
         # other method defaults to the paper's Dopri5
@@ -260,51 +319,61 @@ def odeint(
             "interpolate_ts requires an adaptive solver (got "
             f"{tab.name!r}): fixed grids land on every eval time by "
             "construction, there is no stepsize search to relieve")
+    if h0 is not None and not mali and not tab.adaptive:
+        raise ValueError(
+            f"h0 overrides the adaptive initial-stepsize heuristic; "
+            f"fixed-grid solver {tab.name!r} has no stepsize controller "
+            "— use steps_per_interval to refine its grid instead")
     if _ts_direction(ts) < 0:
         # reverse time: solve the time-negated problem over ascending -ts
         f, ts = _negate_time(f), -ts
 
     cfg = ControllerConfig(max_steps=max_steps, max_trials=max_trials)
+    if h0 is not None:
+        h0 = jnp.asarray(h0, ts.dtype)
 
     if batch_axis is not None:
-        return _odeint_batched(
+        out = _odeint_batched(
             f, z0, ts, args, tab=tab, grad_method=grad_method,
             batch_axis=batch_axis, rtol=rtol, atol=atol, cfg=cfg,
             steps_per_interval=steps_per_interval,
             trial_budget=trial_budget, use_pallas=use_pallas,
             checkpoint_segments=checkpoint_segments,
-            interpolate_ts=interpolate_ts)
-
-    if mali:
-        return odeint_mali(f, z0, ts, args, rtol=rtol, atol=atol,
-                           cfg=cfg, use_pallas=use_pallas)
-
-    if tab.adaptive:
+            interpolate_ts=interpolate_ts, h0=h0)
+    elif mali:
+        out = odeint_mali(f, z0, ts, args, rtol=rtol, atol=atol,
+                          cfg=cfg, h0=h0, use_pallas=use_pallas)
+    elif tab.adaptive:
         if grad_method == "aca":
-            return odeint_aca(f, z0, ts, args, solver=tab, rtol=rtol,
-                              atol=atol, cfg=cfg, use_pallas=use_pallas,
-                              checkpoint_segments=checkpoint_segments,
-                              interpolate_ts=interpolate_ts)
-        if grad_method == "adjoint":
-            return odeint_adjoint(f, z0, ts, args, solver=tab, rtol=rtol,
-                                  atol=atol, cfg=cfg, use_pallas=use_pallas,
-                                  interpolate_ts=interpolate_ts)
-        return odeint_naive(f, z0, ts, args, solver=tab, rtol=rtol,
-                            atol=atol, cfg=cfg, trial_budget=trial_budget,
-                            use_pallas=use_pallas,
-                            interpolate_ts=interpolate_ts)
-
-    if grad_method == "aca":
-        return odeint_aca_fixed(f, z0, ts, args, solver=tab,
-                                steps_per_interval=steps_per_interval,
-                                use_pallas=use_pallas)
-    if grad_method == "adjoint":
-        return odeint_adjoint_fixed(f, z0, ts, args, solver=tab,
-                                    steps_per_interval=steps_per_interval,
-                                    use_pallas=use_pallas)
-    return odeint_naive_fixed(f, z0, ts, args, solver=tab,
-                              steps_per_interval=steps_per_interval,
-                              use_pallas=use_pallas)
+            out = odeint_aca(f, z0, ts, args, solver=tab, rtol=rtol,
+                             atol=atol, cfg=cfg, h0=h0,
+                             use_pallas=use_pallas,
+                             checkpoint_segments=checkpoint_segments,
+                             interpolate_ts=interpolate_ts)
+        elif grad_method == "adjoint":
+            out = odeint_adjoint(f, z0, ts, args, solver=tab, rtol=rtol,
+                                 atol=atol, cfg=cfg, h0=h0,
+                                 use_pallas=use_pallas,
+                                 interpolate_ts=interpolate_ts)
+        else:
+            out = odeint_naive(f, z0, ts, args, solver=tab, rtol=rtol,
+                               atol=atol, cfg=cfg, h0=h0,
+                               trial_budget=trial_budget,
+                               use_pallas=use_pallas,
+                               interpolate_ts=interpolate_ts)
+    elif grad_method == "aca":
+        out = odeint_aca_fixed(f, z0, ts, args, solver=tab,
+                               steps_per_interval=steps_per_interval,
+                               use_pallas=use_pallas)
+    elif grad_method == "adjoint":
+        out = odeint_adjoint_fixed(f, z0, ts, args, solver=tab,
+                                   steps_per_interval=steps_per_interval,
+                                   use_pallas=use_pallas)
+    else:
+        out = odeint_naive_fixed(f, z0, ts, args, solver=tab,
+                                 steps_per_interval=steps_per_interval,
+                                 use_pallas=use_pallas)
+    return _apply_on_failure(out[0], out[1], on_failure)
 
 
 def _odeint_batched(
@@ -324,6 +393,7 @@ def _odeint_batched(
     use_pallas: bool,
     checkpoint_segments: Optional[Union[int, str]] = None,
     interpolate_ts: bool = False,
+    h0: Optional[jnp.ndarray] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """Batched dispatch behind ``odeint(..., batch_axis=a)``.
 
@@ -358,24 +428,25 @@ def _odeint_batched(
 
     if grad_method == "mali":  # tab is None: ALF pair integrator
         ys, stats = odeint_mali_batched(
-            f, z0, ts, args, rtol=rtol, atol=atol, cfg=cfg,
+            f, z0, ts, args, rtol=rtol, atol=atol, cfg=cfg, h0=h0,
             use_pallas=use_pallas)
     elif tab.adaptive:
         if grad_method == "aca":
             ys, stats = odeint_aca_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, use_pallas=use_pallas,
+                cfg=cfg, h0=h0, use_pallas=use_pallas,
                 checkpoint_segments=checkpoint_segments,
                 interpolate_ts=interpolate_ts)
         elif grad_method == "adjoint":
             ys, stats = odeint_adjoint_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, use_pallas=use_pallas,
+                cfg=cfg, h0=h0, use_pallas=use_pallas,
                 interpolate_ts=interpolate_ts)
         else:
             ys, stats = odeint_naive_batched(
                 f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, trial_budget=trial_budget, use_pallas=use_pallas,
+                cfg=cfg, h0=h0, trial_budget=trial_budget,
+                use_pallas=use_pallas,
                 interpolate_ts=interpolate_ts)
     else:
         # fixed grids are identical for every element — lockstep IS the
@@ -435,6 +506,144 @@ def odeint_final(
     ts = jnp.asarray([t0, t1], _time_dtype(t0, t1))
     ys, stats = odeint(f, z0, ts, args, **kw)
     return jax.tree.map(lambda y: y[-1], ys), stats
+
+
+def odeint_checked(
+    f: Callable,
+    z0: PyTree,
+    ts,
+    args: PyTree = (),
+    **kw,
+) -> Tuple[PyTree, SolveStats]:
+    """``odeint`` that *raises* on solve failure instead of returning a
+    status code.
+
+    Functionalizes ``odeint(..., on_failure="raise")`` with
+    ``jax.experimental.checkify`` and throws the collected error on the
+    host: a non-finite state, stepsize underflow, or budget exhaustion
+    surfaces as ``checkify.JaxRuntimeError`` naming the failing status
+    code(s).  Accepts every ``odeint`` keyword except ``on_failure``.
+
+    Call it *outside* jit (the throw needs a concrete error value).  To
+    keep the check inside your own jitted function, call
+    ``odeint(..., on_failure="raise")`` there and wrap the whole
+    function with ``checkify.checkify`` yourself.
+    """
+    kw.pop("on_failure", None)
+    ts = jnp.asarray(ts)  # closed over: keeps reverse-time ts concrete
+
+    def run(z0, args):
+        return odeint(f, z0, ts, args, on_failure="raise", **kw)
+
+    err, out = checkify.checkify(run, errors=checkify.user_checks)(
+        z0, args)
+    err.throw()
+    return out
+
+
+def default_fallback_ladder(ts, *, rtol: float = 1e-6,
+                            atol: float = 1e-6) -> list:
+    """The retry rungs ``solve_with_fallback`` tries after a failed
+    solve, mildest first.
+
+    Each rung is a dict of ``odeint`` keyword overrides (plus a
+    ``"note"`` for the report): (1) tighten the initial step to
+    span/1024 — recovers solves whose first trial overflowed before the
+    controller found the stiff scale; (2) loosen rtol/atol 100× —
+    trades accuracy for stability when the tolerance is unreachable;
+    (3) drop to the lower-order ``bosh3`` pair (smaller stages, wider
+    stability margin per unit error) with ACA gradients; (4) last
+    resort: a fixed-grid ``rk4`` solve with a fine 64-step grid — no
+    stepsize search left to fail, only non-finite states can remain.
+    """
+    span = abs(float(ts[-1]) - float(ts[0]))
+    return [
+        {"note": "tighten h0", "h0": span / 1024.0},
+        {"note": "loosen tolerances 100x",
+         "rtol": rtol * 100.0, "atol": atol * 100.0},
+        {"note": "fall back to bosh3/aca",
+         "solver": "bosh3", "grad_method": "aca"},
+        {"note": "fixed rk4 grid", "solver": "rk4", "grad_method": "aca",
+         "steps_per_interval": 64},
+    ]
+
+
+# odeint keywords that only adaptive solvers understand — dropped from a
+# rung that falls back to a fixed-grid tableau
+_ADAPTIVE_ONLY_KW = ("h0", "checkpoint_segments", "interpolate_ts",
+                     "trial_budget")
+
+
+def solve_with_fallback(
+    f: Callable,
+    z0: PyTree,
+    ts,
+    args: PyTree = (),
+    *,
+    ladder: Optional[list] = None,
+    **kw,
+) -> Tuple[PyTree, SolveStats, list]:
+    """Host-level retry ladder around ``odeint``: re-attempt a failed
+    solve under progressively more conservative configurations.
+
+    Runs ``odeint(f, z0, ts, args, **kw)`` and reads ``stats.status``
+    on the host; when any element is unhealthy, walks the ``ladder`` of
+    keyword-override rungs (default: ``default_fallback_ladder`` —
+    tighten h0, loosen tolerances, drop to bosh3, fixed rk4) until an
+    attempt comes back all-OK with finite outputs.  Returns
+    ``(ys, stats, report)`` where ``report`` is one dict per attempt
+    (note, overrides, status codes, ok flag); if no rung recovers, the
+    *original* attempt's (frozen, finite) outputs are returned and
+    every report entry has ``ok=False``.
+
+    Serving-layer tool: each rung is a fresh trace/compile and the
+    status read is a host sync, so this is **not jittable** — call it
+    from request handlers, not from inside a training step (there, use
+    ``on_failure="status"`` + the train-loop skip-step guard).
+    """
+    kw.pop("on_failure", None)
+    ts = jnp.asarray(ts)
+    if ladder is None:
+        ladder = default_fallback_ladder(
+            ts, rtol=kw.get("rtol", 1e-6), atol=kw.get("atol", 1e-6))
+
+    report: list = []
+    first = None
+    for rung in [{"note": "original"}] + list(ladder):
+        over = {k: v for k, v in rung.items() if k != "note"}
+        akw = {**kw, **over}
+        solver = akw.get("solver")
+        if solver is not None and not _is_alf(solver):
+            tabl = get_tableau(solver) if isinstance(solver, str) \
+                else solver
+            if not tabl.adaptive:
+                for k in _ADAPTIVE_ONLY_KW:
+                    akw.pop(k, None)
+        entry = {"note": rung.get("note", "attempt"), "overrides": over}
+        try:
+            ys, stats = odeint(f, z0, ts, args, **akw)
+        except Exception as e:  # rung invalid for this configuration
+            entry.update(error=repr(e), ok=False)
+            report.append(entry)
+            continue
+        status = np.asarray(jax.device_get(stats.status))
+        finite = all(
+            bool(np.isfinite(np.asarray(leaf)).all())
+            for leaf in jax.tree.leaves(jax.device_get(ys)))
+        ok = bool((status == SolveStatus.OK).all()) and finite
+        entry.update(
+            status=status.tolist() if status.ndim else int(status),
+            ok=ok)
+        report.append(entry)
+        if first is None:
+            first = (ys, stats)
+        if ok:
+            return ys, stats, report
+    if first is None:  # every attempt raised — nothing to return
+        raise RuntimeError(
+            f"solve_with_fallback: every attempt errored: {report}")
+    ys, stats = first
+    return ys, stats, report
 
 
 class DenseSolution(NamedTuple):

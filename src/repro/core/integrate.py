@@ -83,17 +83,55 @@ def _as_tuple(args) -> Tuple:
     return args if isinstance(args, tuple) else (args,)
 
 
+class SolveStatus:
+    """Structured health codes for a solve (``SolveStats.status``).
+
+    Int codes, ordered by severity (0 = healthy).  Scalar for an
+    unbatched solve, per-element (B,) int32 for ``batch_axis`` solves:
+
+    * ``OK`` — every requested eval time was reached normally.
+    * ``NONFINITE_STATE`` — a trial step produced a non-finite state (or
+      error norm) even at the minimum stepsize.  The solve *froze* the
+      affected element at its last accepted state instead of integrating
+      garbage: outputs at un-reached eval times repeat that last-good
+      state, and the backward sweeps zero the element's cotangents.
+    * ``STEPSIZE_UNDERFLOW`` — at least one forced-minimum step (h railed
+      at ``h_min``) was accepted while still failing the error test; the
+      solve completed but local accuracy is not guaranteed.
+    * ``TRIAL_BUDGET_EXHAUSTED`` — the global ψ-trial budget
+      (``max_steps * max_trials``) ran out before the last eval time.
+    * ``CHECKPOINT_OVERFLOW`` — the accepted-step budget (``max_steps``,
+      the checkpoint capacity) ran out before the last eval time
+      (the condition previously only visible as ``stats.overflow``).
+    """
+    OK = 0
+    NONFINITE_STATE = 1
+    STEPSIZE_UNDERFLOW = 2
+    TRIAL_BUDGET_EXHAUSTED = 3
+    CHECKPOINT_OVERFLOW = 4
+
+    _NAMES = {0: "OK", 1: "NONFINITE_STATE", 2: "STEPSIZE_UNDERFLOW",
+              3: "TRIAL_BUDGET_EXHAUSTED", 4: "CHECKPOINT_OVERFLOW"}
+
+    @classmethod
+    def describe(cls, code) -> str:
+        """Human-readable name for one (host-side) status code."""
+        return cls._NAMES.get(int(code), f"UNKNOWN({int(code)})")
+
+
 class SolveStats(NamedTuple):
-    """Solver cost counters for one solve.
+    """Solver cost counters + health status for one solve.
 
     Scalars for an unbatched solve; shape (B,) per-element arrays for a
     batched solve (``batch_axis``), where a finished element's counters
-    stop advancing while stragglers integrate on.
+    stop advancing while stragglers integrate on.  ``status`` holds a
+    ``SolveStatus`` code per solve/element — 0 (OK) on the healthy path.
     """
     n_steps: jnp.ndarray      # accepted steps (paper's N_t)
     n_trials: jnp.ndarray     # total ψ trials (N_t * m)
     nfe: jnp.ndarray          # number of f evaluations
     overflow: jnp.ndarray     # bool: checkpoint buffer exhausted
+    status: jnp.ndarray       # int32 SolveStatus code
 
 
 class Checkpoints(NamedTuple):
@@ -239,6 +277,76 @@ def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
+def _nonfinite_any(tree: PyTree) -> jnp.ndarray:
+    """Scalar bool: any leaf of ``tree`` holds a NaN/Inf.  The cheap
+    finite-mask read of the solve-health guards — pure reduction, no
+    effect on the values it inspects."""
+    out = None
+    for leaf in jax.tree.leaves(tree):
+        flag = jnp.any(~jnp.isfinite(leaf))
+        out = flag if out is None else out | flag
+    return out if out is not None else jnp.asarray(False)
+
+
+def _nonfinite_rows(tree: PyTree) -> jnp.ndarray:
+    """Per-element (B,) bool twin of ``_nonfinite_any`` over
+    batch-leading leaves."""
+    out = None
+    for leaf in jax.tree.leaves(tree):
+        flat = leaf.reshape((leaf.shape[0], -1))
+        flag = jnp.any(~jnp.isfinite(flat), axis=1)
+        out = flag if out is None else out | flag
+    return out
+
+
+def _compose_status(failed, uflow, finished, trials_out) -> jnp.ndarray:
+    """Fold the engines' health flags into one ``SolveStatus`` code
+    (elementwise for batched solves): non-finite failure dominates,
+    then whichever budget truncated the solve, then the accepted-but-
+    out-of-tolerance underflow warning."""
+    budget = jnp.where(trials_out,
+                       SolveStatus.TRIAL_BUDGET_EXHAUSTED,
+                       SolveStatus.CHECKPOINT_OVERFLOW)
+    tail = jnp.where(uflow, SolveStatus.STEPSIZE_UNDERFLOW, SolveStatus.OK)
+    status = jnp.where(finished, tail, budget)
+    return jnp.where(failed, SolveStatus.NONFINITE_STATE,
+                     status).astype(jnp.int32)
+
+
+def _mask_failed_cotangents(g_ys: PyTree, status: jnp.ndarray,
+                            batched: bool = False) -> PyTree:
+    """Zero the output cotangents of solves (or batch elements) whose
+    status is ``NONFINITE_STATE`` before a backward sweep runs.
+
+    A frozen solve's outputs are last-good placeholders, not solution
+    values — their cotangents must not leak into dz0/dargs (for batched
+    solves, into the *shared* dargs reduction).  Every backward sweep is
+    linear in ``g_ys``, so zeroing here yields exact zeros for the
+    failed element and leaves healthy elements bit-identical.
+    ``g_ys`` leaves are (n_eval, ...) solo / (n_eval, B, ...) batched.
+    """
+    ok = status != SolveStatus.NONFINITE_STATE
+    if not batched:
+        return jax.tree.map(
+            lambda g: jnp.where(ok, g, jnp.zeros_like(g)), g_ys)
+    return jax.tree.map(
+        lambda g: jnp.where(ok.reshape((1, -1) + (1,) * (g.ndim - 2)),
+                            g, jnp.zeros_like(g)),
+        g_ys)
+
+
+def _freeze_fill(ys: PyTree, mask: jnp.ndarray, z_frozen: PyTree) -> PyTree:
+    """Repeat a failed solve's last accepted state into its un-reached
+    eval slots, so frozen elements return finite last-good values
+    instead of zero-initialized buffer slots.  ``mask`` is (n_eval,)
+    solo / (n_eval, B) batched; bitwise no-op where it is False."""
+    return jax.tree.map(
+        lambda b, v: jnp.where(
+            mask.reshape(mask.shape + (1,) * (b.ndim - mask.ndim)),
+            v[None], b),
+        ys, z_frozen)
+
+
 def natural_grid_outputs(ts, karr, tiny, t, t_new, h_use, accept, hit,
                          eval_idx, ys, z, z_next, k0, k1, z_mid):
     """One trial's output writes in natural-grid (``interpolate_ts``)
@@ -315,6 +423,7 @@ def adaptive_while_solve(
     checkpoint_segments: Optional[int] = None,
     interpolate_ts: bool = False,
     store_coeffs: bool = False,
+    guard_nonfinite: bool = True,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Integrate dz/dt = f(t, z, *args) through increasing times ``ts``.
 
@@ -345,6 +454,19 @@ def adaptive_while_solve(
     step's interpolant coefficients in ``Checkpoints.coeffs`` (the
     dense-solution mode of ``odeint_dense``); it implies the natural
     grid.
+
+    ``guard_nonfinite`` (default on) arms the solve-health guards: a
+    trial producing a non-finite state or error norm is never accepted
+    (even a forced-minimum one), and once the stepsize has railed at
+    ``h_min`` with the trial still non-finite the solve *freezes* at its
+    last accepted state and reports ``SolveStatus.NONFINITE_STATE``.
+    The whole guard is one ``isfinite`` read of the already-computed
+    error ratio — a non-finite trial state always poisons it (every
+    stage feeding ``z_next`` has a nonzero embedded-error weight, and an
+    Inf state turns the scaled norm into Inf/Inf = NaN) — so the healthy
+    path stays bit-identical at ~zero cost; ``False`` reproduces the
+    unguarded loop (used by ``bench_failure_overhead`` to price the
+    guards).
     """
     n_eval = ts.shape[0]
     tdt = ts.dtype
@@ -368,6 +490,10 @@ def adaptive_while_solve(
     k0 = f(ts[0], z0, *args)
     nfe0 = jnp.asarray(1 + hinit_evals, jnp.int32)
 
+    # a non-finite initial state / derivative / h0 fails before stepping
+    failed0 = _nonfinite_any((z0, k0, h0)) if guard_nonfinite \
+        else jnp.asarray(False)
+
     carry0 = dict(
         t=ts[0], z=z0, k0=k0, h=h0,
         prev_ratio=jnp.asarray(1.0, jnp.float32),
@@ -375,6 +501,7 @@ def adaptive_while_solve(
         eval_idx=jnp.asarray(1, jnp.int32),     # next ts[] to hit
         trials=jnp.asarray(0, jnp.int32),
         nfe=nfe0,
+        failed=failed0, uflow=jnp.asarray(False),
         ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
     )
     if checkpoint_segments is not None:
@@ -397,6 +524,7 @@ def adaptive_while_solve(
             (c["eval_idx"] < n_eval)
             & (c["i"] < max_steps)
             & (c["trials"] < max_total_trials)
+            & ~c["failed"]
         )
 
     def body(c):
@@ -417,11 +545,33 @@ def adaptive_while_solve(
             # fused path: the scaled norm came out of the combine kernel
             ratio = res.err_ratio if res.err_ratio is not None else \
                 error_ratio(res.err, z, res.z_next, rtol, atol)
-            # forced-minimum steps are always accepted (cannot shrink further)
-            accept = (ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3))
+            railed = h_use <= h_min * (1 + 1e-3)
+            if guard_nonfinite:
+                # one scalar read guards the whole trial: a NaN/Inf
+                # anywhere in the stage sums poisons the embedded error
+                # (every stage feeding z_next carries a nonzero error
+                # weight in our tableaus) and an Inf state makes the
+                # scaled norm Inf/Inf = NaN — so ratio is non-finite
+                # exactly when the trial is, at zero extra reductions
+                bad = ~jnp.isfinite(ratio)
+                # non-finite trials are never accepted; forced-minimum
+                # steps are otherwise always accepted (cannot shrink)
+                accept = ((ratio <= 1.0) | railed) & ~bad
+            else:
+                bad = jnp.asarray(False)
+                accept = (ratio <= 1.0) | railed
         else:
             ratio = jnp.asarray(0.5, jnp.float32)
-            accept = jnp.asarray(True)
+            # fixed-step: no retry possible, so a bad step is terminal
+            railed = jnp.asarray(True)
+            bad = _nonfinite_any(res.z_next) if guard_nonfinite \
+                else jnp.asarray(False)
+            accept = ~bad
+
+        # health flags: railed + still non-finite -> freeze (terminal);
+        # forced accept that still fails the error test -> underflow
+        fail_now = bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -495,8 +645,12 @@ def adaptive_while_solve(
             eval_advance = hit.astype(jnp.int32)
 
         # --- stepsize control ---------------------------------------------
+        # a non-finite error ratio would poison the controller's h chain
+        # (NaN h never recovers); treat it as "error way too large" so
+        # the retry shrinks at max rate.  Bitwise no-op when finite.
+        ratio_c = jnp.where(bad, jnp.asarray(1e10, jnp.float32), ratio)
         h_next = propose_stepsize(
-            cfg, h_use, ratio, c["prev_ratio"], tab.order)
+            cfg, h_use, ratio_c, c["prev_ratio"], tab.order)
         # (the paper's Algo 1: shrink and retry on reject; grow on accept)
         h_next = jnp.asarray(h_next, tdt)
 
@@ -514,6 +668,8 @@ def adaptive_while_solve(
             eval_idx=c["eval_idx"] + eval_advance,
             trials=c["trials"] + 1,
             nfe=nfe,
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
             ckpt_oi=ckpt_oi,
         )
@@ -525,14 +681,19 @@ def adaptive_while_solve(
     c = jax.lax.while_loop(cond, body, carry0)
 
     overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             c["trials"] >= max_total_trials)
+    # frozen solve: repeat the last accepted state into un-reached slots
+    ys_out = _freeze_fill(c["ys"], c["failed"] & (karr >= c["eval_idx"]),
+                          c["z"])
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
                         out_idx=c["ckpt_oi"], n=c["i"],
                         k0=c.get("ckpt_k0"),
                         ev_lo=c.get("ckpt_elo"), ev_hi=c.get("ckpt_ehi"),
                         coeffs=c.get("ckpt_cf"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
-                       overflow=overflow)
-    return c["ys"], ckpts, stats
+                       overflow=overflow, status=status)
+    return ys_out, ckpts, stats
 
 
 def _bwhere(pred, a, b):
@@ -557,6 +718,7 @@ def batched_adaptive_while_solve(
     use_pallas: bool = False,
     checkpoint_segments: Optional[int] = None,
     interpolate_ts: bool = False,
+    guard_nonfinite: bool = True,
 ) -> Tuple[PyTree, Checkpoints, SolveStats]:
     """Per-sample batched adaptive solve: one fused while_loop, one
     stepsize controller *per batch element*.
@@ -582,6 +744,10 @@ def batched_adaptive_while_solve(
     every element advances on its own natural grid and reads interior
     eval times off its own per-step interpolants (per-element
     ``ev_lo``/``ev_hi`` rows feed the batched ACA backward sweep).
+    ``guard_nonfinite`` as in ``adaptive_while_solve``, per element: a
+    failing element freezes (leaves the live set, h = 0 identity trials)
+    and reports ``SolveStatus.NONFINITE_STATE`` in its status row while
+    healthy elements integrate on bit-identically.
     """
     if not tab.adaptive:
         raise ValueError("batched_adaptive_while_solve requires an "
@@ -610,6 +776,10 @@ def batched_adaptive_while_solve(
     k0 = fb0(jnp.full((B,), ts[0], tdt), z0)
     nfe0 = jnp.full((B,), 1 + hinit_evals, jnp.int32)
 
+    # elements starting from a non-finite state/derivative/h0 fail at once
+    failed0 = _nonfinite_rows((z0, k0, h0)) if guard_nonfinite \
+        else jnp.zeros((B,), bool)
+
     carry0 = dict(
         t=jnp.full((B,), ts[0], tdt), z=z0, k0=k0, h=h0,
         prev_ratio=jnp.ones((B,), jnp.float32),
@@ -617,6 +787,7 @@ def batched_adaptive_while_solve(
         eval_idx=jnp.ones((B,), jnp.int32),     # next ts[] to hit
         trials=jnp.zeros((B,), jnp.int32),
         nfe=nfe0,
+        failed=failed0, uflow=jnp.zeros((B,), bool),
         ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z, ckpt_oi=ckpt_oi,
     )
     if checkpoint_segments is not None:
@@ -638,6 +809,7 @@ def batched_adaptive_while_solve(
             (c["eval_idx"] < n_eval)
             & (c["i"] < max_steps)
             & (c["trials"] < max_total_trials)
+            & ~c["failed"]
         )
 
     def cond(c):
@@ -658,7 +830,18 @@ def batched_adaptive_while_solve(
                               err_scale=(rtol, atol),
                               dense=interpolate_ts)
         ratio = res.err_ratio                                   # (B,)
-        accept = live & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+        railed = h_use <= h_min * (1 + 1e-3)
+        if guard_nonfinite:
+            # per-row scalar read: a non-finite row state forces a
+            # non-finite row ratio (see adaptive_while_solve)
+            bad = ~jnp.isfinite(ratio)
+            accept = live & ((ratio <= 1.0) | railed) & ~bad
+        else:
+            bad = jnp.zeros((B,), bool)
+            accept = live & ((ratio <= 1.0) | railed)
+        # per-element health flags (dead rows: live False masks them out)
+        fail_now = live & bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -732,8 +915,11 @@ def batched_adaptive_while_solve(
             eval_advance = hit.astype(jnp.int32)
 
         # --- per-element stepsize control ---------------------------------
+        # sanitize non-finite ratios so the per-element h chain cannot
+        # absorb a NaN (max-rate shrink instead); bitwise no-op when finite
+        ratio_c = jnp.where(bad, jnp.asarray(1e10, jnp.float32), ratio)
         h_next = propose_stepsize(
-            cfg, h_use, ratio, c["prev_ratio"], tab.order)
+            cfg, h_use, ratio_c, c["prev_ratio"], tab.order)
         h_next = jnp.asarray(h_next, tdt)
 
         k0_new = _bwhere_tree(accept, k0_acc, c["k0"])
@@ -753,6 +939,8 @@ def batched_adaptive_while_solve(
             eval_idx=c["eval_idx"] + eval_advance,
             trials=c["trials"] + live.astype(jnp.int32),
             nfe=nfe,
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys, ckpt_t=ckpt_t, ckpt_h=ckpt_h, ckpt_z=ckpt_z,
             ckpt_oi=ckpt_oi,
         )
@@ -764,13 +952,17 @@ def batched_adaptive_while_solve(
     c = jax.lax.while_loop(cond, body, carry0)
 
     overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             c["trials"] >= max_total_trials)
+    fill = c["failed"][None, :] & (karr[:, None] >= c["eval_idx"][None, :])
+    ys_out = _freeze_fill(c["ys"], fill, c["z"])
     ckpts = Checkpoints(t=c["ckpt_t"], h=c["ckpt_h"], z=c["ckpt_z"],
                         out_idx=c["ckpt_oi"], n=c["i"],
                         k0=c.get("ckpt_k0"),
                         ev_lo=c.get("ckpt_elo"), ev_hi=c.get("ckpt_ehi"))
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
-                       overflow=overflow)
-    return c["ys"], ckpts, stats
+                       overflow=overflow, status=status)
+    return ys_out, ckpts, stats
 
 
 def make_fixed_grid(ts: jnp.ndarray, steps_per_interval: int) -> jnp.ndarray:
@@ -834,11 +1026,17 @@ def fixed_grid_solve(
         ys = jax.vmap(unravel)(ys)
 
     n_steps = n_intervals * steps_per_interval
+    # fixed grids have no trial/accept loop to guard: the health check
+    # is a single post-hoc finite-mask read over the outputs
+    status = jnp.where(_nonfinite_any(ys),
+                       SolveStatus.NONFINITE_STATE,
+                       SolveStatus.OK).astype(jnp.int32)
     stats = SolveStats(
         n_steps=jnp.asarray(n_steps, jnp.int32),
         n_trials=jnp.asarray(n_steps, jnp.int32),
         nfe=jnp.asarray(n_steps * tab.stages, jnp.int32),
         overflow=jnp.asarray(False),
+        status=status,
     )
     return ys, stats
 
@@ -882,6 +1080,7 @@ def mali_adaptive_solve(
     atol: float,
     cfg: ControllerConfig,
     h0: Optional[jnp.ndarray] = None,
+    guard_nonfinite: bool = True,
 ) -> Tuple[PyTree, MaliGrid, SolveStats]:
     """Adaptive asynchronous-leapfrog solve through increasing ``ts``.
 
@@ -914,6 +1113,9 @@ def mali_adaptive_solve(
 
     ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
 
+    failed0 = _nonfinite_any((z0, v0, h0)) if guard_nonfinite \
+        else jnp.asarray(False)
+
     carry0 = dict(
         t=ts[0], zq=zq0, vq=vq0, h=h0,
         prev_ratio=jnp.asarray(1.0, jnp.float32),
@@ -921,6 +1123,7 @@ def mali_adaptive_solve(
         eval_idx=jnp.asarray(1, jnp.int32),
         trials=jnp.asarray(0, jnp.int32),
         nfe=jnp.asarray(1 + hinit_evals, jnp.int32),  # + the v0 eval
+        failed=failed0, uflow=jnp.asarray(False),
         ys=ys,
         grid_t=jnp.zeros((max_steps,), tdt),
         grid_h=jnp.zeros((max_steps,), tdt),
@@ -934,6 +1137,7 @@ def mali_adaptive_solve(
             (c["eval_idx"] < n_eval)
             & (c["i"] < max_steps)
             & (c["trials"] < max_total_trials)
+            & ~c["failed"]
         )
 
     def body(c):
@@ -945,7 +1149,19 @@ def mali_adaptive_solve(
                        targs)
         z_f = lattice_decode(c["zq"], scale_exp, z0)
         ratio = error_ratio(res.err, z_f, res.z_next, rtol, atol)
-        accept = (ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3))
+        railed = h_use <= h_min * (1 + 1e-3)
+        if guard_nonfinite:
+            # the lattice encode launders NaN ints into finite garbage,
+            # so the decoded state is useless as a detector — but the
+            # raw f eval still poisons res.err, so the ratio read is
+            # both the cheap AND the only sound guard here
+            bad = ~jnp.isfinite(ratio)
+            accept = ((ratio <= 1.0) | railed) & ~bad
+        else:
+            bad = jnp.asarray(False)
+            accept = (ratio <= 1.0) | railed
+        fail_now = bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -966,8 +1182,9 @@ def mali_adaptive_solve(
                 jnp.where(hit, v, b[c["eval_idx"]])),
             c["ys"], res.z_next)
 
+        ratio_c = jnp.where(bad, jnp.asarray(1e10, jnp.float32), ratio)
         h_next = jnp.asarray(propose_stepsize(
-            cfg, h_use, ratio, c["prev_ratio"], ALF_ORDER), tdt)
+            cfg, h_use, ratio_c, c["prev_ratio"], ALF_ORDER), tdt)
 
         return dict(
             t=jnp.where(accept, t_new, t),
@@ -980,16 +1197,24 @@ def mali_adaptive_solve(
             eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
             trials=c["trials"] + 1,
             nfe=c["nfe"] + 1,  # one midpoint eval per ALF trial
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys, grid_t=grid_t, grid_h=grid_h, grid_oi=grid_oi,
         )
 
     c = jax.lax.while_loop(cond, body, carry0)
 
+    overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             c["trials"] >= max_total_trials)
+    karr = jnp.arange(n_eval)
+    ys_out = _freeze_fill(c["ys"], c["failed"] & (karr >= c["eval_idx"]),
+                          lattice_decode(c["zq"], scale_exp, z0))
     grid = MaliGrid(t=c["grid_t"], h=c["grid_h"], out_idx=c["grid_oi"],
                     n=c["i"], zT=c["zq"], vT=c["vq"], scale_exp=scale_exp)
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
-                       overflow=c["eval_idx"] < n_eval)
-    return c["ys"], grid, stats
+                       overflow=overflow, status=status)
+    return ys_out, grid, stats
 
 
 def batched_mali_adaptive_solve(
@@ -1001,6 +1226,7 @@ def batched_mali_adaptive_solve(
     atol: float,
     cfg: ControllerConfig,
     h0: Optional[jnp.ndarray] = None,
+    guard_nonfinite: bool = True,
 ) -> Tuple[PyTree, MaliGrid, SolveStats]:
     """Per-sample batched MALI forward: ``odeint(..., batch_axis=0,
     grad_method="mali")``.
@@ -1037,6 +1263,9 @@ def batched_mali_adaptive_solve(
 
     ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
 
+    failed0 = _nonfinite_rows((z0, v0, h0)) if guard_nonfinite \
+        else jnp.zeros((B,), bool)
+
     carry0 = dict(
         t=jnp.full((B,), ts[0], tdt), zq=zq0, vq=vq0, h=h0,
         prev_ratio=jnp.ones((B,), jnp.float32),
@@ -1044,6 +1273,7 @@ def batched_mali_adaptive_solve(
         eval_idx=jnp.ones((B,), jnp.int32),
         trials=jnp.zeros((B,), jnp.int32),
         nfe=jnp.full((B,), 1 + hinit_evals, jnp.int32),
+        failed=failed0, uflow=jnp.zeros((B,), bool),
         ys=ys,
         grid_t=jnp.zeros((B, max_steps), tdt),
         grid_h=jnp.zeros((B, max_steps), tdt),
@@ -1057,6 +1287,7 @@ def batched_mali_adaptive_solve(
             (c["eval_idx"] < n_eval)
             & (c["i"] < max_steps)
             & (c["trials"] < max_total_trials)
+            & ~c["failed"]
         )
 
     def cond(c):
@@ -1075,7 +1306,17 @@ def batched_mali_adaptive_solve(
         ratio = jax.vmap(
             lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
                 res.err, z_f, res.z_next)                         # (B,)
-        accept = live & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+        railed = h_use <= h_min * (1 + 1e-3)
+        if guard_nonfinite:
+            # per-row ratio read (see mali_adaptive_solve: the decoded
+            # lattice state can't carry the NaN, res.err does)
+            bad = ~jnp.isfinite(ratio)
+            accept = live & ((ratio <= 1.0) | railed) & ~bad
+        else:
+            bad = jnp.zeros((B,), bool)
+            accept = live & ((ratio <= 1.0) | railed)
+        fail_now = live & bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -1098,8 +1339,9 @@ def batched_mali_adaptive_solve(
             lambda b, v: b.at[e_c, rows].set(_bwhere(hit, v, b[e_c, rows])),
             c["ys"], res.z_next)
 
+        ratio_c = jnp.where(bad, jnp.asarray(1e10, jnp.float32), ratio)
         h_next = jnp.asarray(propose_stepsize(
-            cfg, h_use, ratio, c["prev_ratio"], ALF_ORDER), tdt)
+            cfg, h_use, ratio_c, c["prev_ratio"], ALF_ORDER), tdt)
 
         return dict(
             t=jnp.where(accept, t_new, t),
@@ -1112,13 +1354,22 @@ def batched_mali_adaptive_solve(
             eval_idx=c["eval_idx"] + hit.astype(jnp.int32),
             trials=c["trials"] + live.astype(jnp.int32),
             nfe=c["nfe"] + live.astype(jnp.int32),
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys, grid_t=grid_t, grid_h=grid_h, grid_oi=grid_oi,
         )
 
     c = jax.lax.while_loop(cond, body, carry0)
 
+    overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             c["trials"] >= max_total_trials)
+    karr = jnp.arange(n_eval)
+    fill = c["failed"][None, :] & (karr[:, None] >= c["eval_idx"][None, :])
+    ys_out = _freeze_fill(c["ys"], fill,
+                          lattice_decode(c["zq"], scale_exp, z0))
     grid = MaliGrid(t=c["grid_t"], h=c["grid_h"], out_idx=c["grid_oi"],
                     n=c["i"], zT=c["zq"], vT=c["vq"], scale_exp=scale_exp)
     stats = SolveStats(n_steps=c["i"], n_trials=c["trials"], nfe=c["nfe"],
-                       overflow=c["eval_idx"] < n_eval)
-    return c["ys"], grid, stats
+                       overflow=overflow, status=status)
+    return ys_out, grid, stats

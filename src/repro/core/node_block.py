@@ -72,6 +72,11 @@ class NodeConfig:
     # classic full buffer.  Gradients are bit-identical either way —
     # this is purely a memory/recompute trade — see odeint()
     checkpoint_segments: Optional[Any] = None
+    # solve-health policy: "status" (default, report via stats.status),
+    # "warn" (jax.debug.print on failure) or "raise" (checkify check —
+    # functionalize jitted callers with checkify.checkify); see
+    # docs/robustness.md
+    on_failure: str = "status"
 
 
 def node_block_apply(
@@ -106,6 +111,7 @@ def node_block_apply(
             # threaded so a segmented config on the fixed regime raises
             # the api's informative error instead of silently ignoring
             checkpoint_segments=cfg.checkpoint_segments,
+            on_failure=cfg.on_failure,
         )
     else:
         zT, _ = odeint_final(
@@ -119,6 +125,7 @@ def node_block_apply(
             use_pallas=cfg.use_pallas,
             batch_axis=cfg.batch_axis,
             checkpoint_segments=cfg.checkpoint_segments,
+            on_failure=cfg.on_failure,
         )
     return zT
 

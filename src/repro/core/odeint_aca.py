@@ -46,9 +46,12 @@ from .controller import ControllerConfig
 from .integrate import (
     Checkpoints,
     SolveStats,
+    SolveStatus,
     _as_tuple,
     _buffer_slot,
     _bwhere,
+    _mask_failed_cotangents,
+    _nonfinite_any,
     adaptive_while_solve,
     batched_adaptive_while_solve,
     make_fixed_grid,
@@ -548,6 +551,7 @@ def odeint_aca_batched(
     rtol: float = 1e-6,
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
+    h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     checkpoint_segments=None,
     interpolate_ts: bool = False,
@@ -589,20 +593,22 @@ def odeint_aca_batched(
     def solve(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            h0=h0, use_pallas=use_pallas, checkpoint_segments=n_seg,
             interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, ckpts, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, checkpoint_segments=n_seg,
+            h0=h0, use_pallas=use_pallas, checkpoint_segments=n_seg,
             interpolate_ts=interpolate_ts)
-        return (ys, stats), (ckpts, args, ts)
+        return (ys, stats), (ckpts, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        ckpts, args, ts = res
+        ckpts, args, ts, status = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
+        # failed elements: frozen placeholder outputs carry no gradient
+        g_ys = _mask_failed_cotangents(g_ys, status, batched=True)
         if n_seg is None:
             dz0, dargs = _aca_backward_sweep_batched(
                 solver, f, ckpts, args, g_ys, ckpts.n,
@@ -689,11 +695,14 @@ def odeint_aca(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0,
             use_pallas=use_pallas, checkpoint_segments=n_seg,
             interpolate_ts=interpolate_ts)
-        return (ys, stats), (ckpts, args, ts)
+        return (ys, stats), (ckpts, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        ckpts, args, ts = res
+        ckpts, args, ts, status = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
+        # a frozen (NONFINITE_STATE) solve's placeholder outputs carry
+        # no gradient: zero the cotangents before the replay sweep
+        g_ys = _mask_failed_cotangents(g_ys, status)
         if n_seg is None:
             dz0, dargs = _aca_backward_sweep(
                 solver, f, ckpts, args, g_ys, ckpts.n,
@@ -743,13 +752,6 @@ def odeint_aca_fixed(
     idx_clamped = np.minimum(
         np.arange(1, n_intervals + 1) * steps_per_interval, n_steps - 1)
 
-    stats = SolveStats(
-        n_steps=jnp.asarray(n_steps, jnp.int32),
-        n_trials=jnp.asarray(n_steps, jnp.int32),
-        nfe=jnp.asarray(n_steps * solver.stages, jnp.int32),
-        overflow=jnp.asarray(False),
-    )
-
     def _fwd(z0, args, t_grid, h_grid):
         def step_fn(z, th):
             t, h = th
@@ -794,4 +796,15 @@ def odeint_aca_fixed(
     ys = solve(z0, args, t_grid, h_grid)
     if unravel is not None:
         ys = jax.vmap(unravel)(ys)
+    # fixed grids have no trial loop to guard: post-hoc finite check
+    status = jnp.where(_nonfinite_any(jax.lax.stop_gradient(ys)),
+                       SolveStatus.NONFINITE_STATE,
+                       SolveStatus.OK).astype(jnp.int32)
+    stats = SolveStats(
+        n_steps=jnp.asarray(n_steps, jnp.int32),
+        n_trials=jnp.asarray(n_steps, jnp.int32),
+        nfe=jnp.asarray(n_steps * solver.stages, jnp.int32),
+        overflow=jnp.asarray(False),
+        status=status,
+    )
     return ys, stats

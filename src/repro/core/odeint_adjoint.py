@@ -26,6 +26,7 @@ from .controller import ControllerConfig
 from .integrate import (
     SolveStats,
     _as_tuple,
+    _mask_failed_cotangents,
     adaptive_while_solve,
     batched_adaptive_while_solve,
     fixed_grid_solve,
@@ -82,10 +83,18 @@ def odeint_adjoint(
     rtol: float = 1e-6,
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
+    h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Adjoint-method odeint: O(N_f) memory, reverse-time numerical error.
+
+    ``h0`` overrides the automatic initial-stepsize heuristic for the
+    forward solve (solve-health fallback ladders use this to retry with a
+    tighter first step).  On non-finite detection the forward engine
+    freezes the solve (``stats.status == SolveStatus.NONFINITE_STATE``)
+    and the backward sweep zeroes the output cotangents, so a failed
+    solve contributes exact-zero gradients instead of NaN.
 
     ``use_pallas`` runs the forward solve on the raveled state and each
     backward segment on the raveled augmented (z̄, λ, ḡ) state, both
@@ -119,19 +128,20 @@ def odeint_adjoint(
     def solve(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
-            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
+            h0=h0, use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, _, stats = adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, fwd_cfg,
-            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
+            h0=h0, use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         # residuals: ONLY the eval-time states (z(T) et al.) — O(N_f) memory
-        return (ys, stats), (ys, args, ts)
+        return (ys, stats), (ys, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        ys, args, ts = res
+        ys, args, ts, status = res
         g_ys, _ = cot
+        g_ys = _mask_failed_cotangents(g_ys, status)
         n_eval = ts.shape[0]
         g_aug = _aug_dynamics(f)
 
@@ -187,6 +197,7 @@ def odeint_adjoint_batched(
     rtol: float = 1e-6,
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
+    h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
     interpolate_ts: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
@@ -215,19 +226,20 @@ def odeint_adjoint_batched(
     def solve(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
+            h0=h0, use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, _, stats = batched_adaptive_while_solve(
             solver, f, z0, ts, _as_tuple(args), rtol, atol, cfg,
-            use_pallas=use_pallas, interpolate_ts=interpolate_ts)
+            h0=h0, use_pallas=use_pallas, interpolate_ts=interpolate_ts)
         # residuals: ONLY the eval-time states — O(N_f) memory per element
-        return (ys, stats), (ys, args, ts)
+        return (ys, stats), (ys, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        ys, args, ts = res
+        ys, args, ts, status = res
         g_ys, _ = cot
+        g_ys = _mask_failed_cotangents(g_ys, status, batched=True)
         n_eval = ts.shape[0]
         B = jax.tree.leaves(ys)[0].shape[1]
         g_aug = _aug_dynamics(f)

@@ -55,6 +55,7 @@ from .integrate import (
     _as_tuple,
     _buffer_slot,
     _bwhere_tree,
+    _mask_failed_cotangents,
     batched_mali_adaptive_solve,
     mali_adaptive_solve,
 )
@@ -263,11 +264,12 @@ def odeint_mali(
     def solve_fwd(z0, args, ts):
         ys, grid, stats = mali_adaptive_solve(
             f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
-        return (ys, stats), (grid, z0, args, ts)
+        return (ys, stats), (grid, z0, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        grid, z0, args, ts = res
+        grid, z0, args, ts, status = res
         g_ys, _g_stats = cot  # stats are integer outputs; cotangent ignored
+        g_ys = _mask_failed_cotangents(g_ys, status)
         dz0, dargs = _mali_backward_sweep(
             f, grid, z0, args, g_ys, ts, use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(ts)
@@ -288,6 +290,7 @@ def odeint_mali_batched(
     rtol: float = 1e-6,
     atol: float = 1e-6,
     cfg: Optional[ControllerConfig] = None,
+    h0: Optional[jnp.ndarray] = None,
     use_pallas: bool = False,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched MALI: ``odeint(..., batch_axis=0,
@@ -311,17 +314,18 @@ def odeint_mali_batched(
     @jax.custom_vjp
     def solve(z0, args, ts):
         ys, _, stats = batched_mali_adaptive_solve(
-            f, z0, ts, _as_tuple(args), rtol, atol, cfg)
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
         return ys, stats
 
     def solve_fwd(z0, args, ts):
         ys, grid, stats = batched_mali_adaptive_solve(
-            f, z0, ts, _as_tuple(args), rtol, atol, cfg)
-        return (ys, stats), (grid, z0, args, ts)
+            f, z0, ts, _as_tuple(args), rtol, atol, cfg, h0=h0)
+        return (ys, stats), (grid, z0, args, ts, stats.status)
 
     def solve_bwd(res, cot):
-        grid, z0, args, ts = res
+        grid, z0, args, ts, status = res
         g_ys, _g_stats = cot
+        g_ys = _mask_failed_cotangents(g_ys, status, batched=True)
         dz0, dargs = _mali_backward_sweep_batched(
             f, grid, z0, args, g_ys, ts, use_pallas=use_pallas)
         return dz0, dargs, jnp.zeros_like(ts)

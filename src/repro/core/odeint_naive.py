@@ -27,7 +27,11 @@ from .integrate import (
     _as_tuple,
     _buffer_set,
     _bwhere,
+    _compose_status,
     _empty_buffer,
+    _freeze_fill,
+    _nonfinite_any,
+    _nonfinite_rows,
     fixed_grid_solve,
     natural_grid_outputs,
     natural_grid_outputs_batched,
@@ -57,11 +61,25 @@ def odeint_naive(
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
     interpolate_ts: bool = False,
+    h0: Optional[jnp.ndarray] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """Differentiable adaptive solve (naive method).
 
     ``trial_budget`` bounds the total number of ψ trials (accepted or
-    rejected); defaults to cfg.max_steps * cfg.max_trials.
+    rejected); defaults to cfg.max_steps * cfg.max_trials.  ``h0``
+    overrides the Hairer initial stepsize (ignored on the fixed-grid
+    fallback).
+
+    Solve-health: non-finite trials are never accepted; once the
+    stepsize rails at ``h_min`` with the trial still non-finite the
+    element freezes at its last accepted state (post-failure iterations
+    take the same discarded sliver trials as finished elements) and
+    ``stats.status`` reports ``SolveStatus.NONFINITE_STATE``.  NOTE:
+    unlike the custom-vjp methods, the naive method keeps *every* trial
+    on the differentiation tape — including the non-finite one that
+    tripped the guard — so gradients after a fault are not guaranteed
+    finite here; pair with the train-loop skip-step guard
+    (``docs/robustness.md``).
 
     ``use_pallas`` runs every recorded trial (step + error norm) through
     the fused flat-state kernels over the raveled state; reverse-mode AD
@@ -91,22 +109,29 @@ def odeint_naive(
     targs = _as_tuple(args)
     karr = jnp.arange(n_eval)
 
-    h_init = initial_stepsize(f, ts[0], z0, targs, solver.order, rtol, atol)
+    h_init = initial_stepsize(f, ts[0], z0, targs, solver.order, rtol,
+                              atol) if h0 is None else h0
 
     ys0 = jax.tree.map(
         lambda l: jnp.zeros((n_eval,) + l.shape, l.dtype), z0)
     ys0 = jax.tree.map(lambda b, v: b.at[0].set(v), ys0, z0)
+
+    failed0 = _nonfinite_any(
+        (z0, jnp.asarray(h_init, tdt)))
 
     carry0 = dict(
         t=ts[0], z=z0, h=jnp.asarray(h_init, tdt),
         prev_ratio=jnp.asarray(1.0, jnp.float32),
         eval_idx=jnp.asarray(1, jnp.int32),
         n_acc=jnp.asarray(0, jnp.int32),
+        failed=failed0, uflow=jnp.asarray(False),
         ys=ys0,
     )
 
     def body(c, _):
-        done = c["eval_idx"] >= n_eval
+        # failed elements behave exactly like finished ones: frozen
+        # state, discarded sliver trials until the budget runs out
+        done = (c["eval_idx"] >= n_eval) | c["failed"]
         t, z, h = c["t"], c["z"], c["h"]
         t_target = ts[n_eval - 1] if interpolate_ts else \
             ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
@@ -130,7 +155,14 @@ def odeint_naive(
                       dense=interpolate_ts)
         ratio = res.err_ratio if res.err_ratio is not None else \
             error_ratio(res.err, z, res.z_next, rtol, atol)
-        accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+        railed = h_use <= h_min * (1 + 1e-3)
+        # detection reads stop_gradiented values: the flags must not
+        # add edges to the naive tape
+        bad = _nonfinite_any(jax.lax.stop_gradient(res.z_next)) | \
+            ~jnp.isfinite(jax.lax.stop_gradient(ratio))
+        accept = (~done) & ((ratio <= 1.0) | railed) & ~bad
+        fail_now = (~done) & bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -159,8 +191,10 @@ def odeint_naive(
         # post-done h_min trials produce ratios ~eps(tdt)/tol whose
         # ratio^(-1/p) jacobian overflows f32 under x64 time grids and
         # XLA fusion can turn the masked inf into NaN — feed the
-        # discarded computation a neutral ratio instead
-        ratio_h = jnp.where(done, jnp.ones_like(ratio), ratio)
+        # discarded computation a neutral ratio instead.  Non-finite
+        # ratios get the same neutral treatment so the h chain cannot
+        # absorb a NaN.
+        ratio_h = jnp.where(done | bad, jnp.ones_like(ratio), ratio)
         h_next = propose_stepsize(cfg, h_use, ratio_h, c["prev_ratio"],
                                   solver.order).astype(tdt)
 
@@ -173,13 +207,23 @@ def odeint_naive(
                                  c["prev_ratio"]),
             eval_idx=c["eval_idx"] + eval_advance,
             n_acc=c["n_acc"] + accept.astype(jnp.int32),
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys,
         )
         return c_new, None
 
     c, _ = jax.lax.scan(body, carry0, None, length=budget)
-    ys_out = c["ys"] if unravel is None else jax.vmap(unravel)(c["ys"])
+    # frozen solve: repeat the last accepted state into un-reached slots
+    # (stop_gradiented — a failed element's cotangents stay off the fill)
+    fill = c["failed"] & (karr >= c["eval_idx"])
+    ys_filled = _freeze_fill(c["ys"], fill,
+                             jax.lax.stop_gradient(c["z"]))
+    ys_out = ys_filled if unravel is None else jax.vmap(unravel)(ys_filled)
 
+    overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             jnp.asarray(True))
     # interpolate mode on a non-FSAL pair pays one extra k1 eval/trial
     evals_per_trial = solver.stages + (
         1 if interpolate_ts and not solver.fsal else 0)
@@ -187,7 +231,8 @@ def odeint_naive(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
         n_trials=jnp.asarray(budget, jnp.int32),
         nfe=jnp.asarray(budget * evals_per_trial, jnp.int32),
-        overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
+        overflow=jax.lax.stop_gradient(overflow),
+        status=jax.lax.stop_gradient(status),
     )
     return ys_out, stats
 
@@ -205,6 +250,7 @@ def odeint_naive_batched(
     trial_budget: Optional[int] = None,
     use_pallas: bool = False,
     interpolate_ts: bool = False,
+    h0: Optional[jnp.ndarray] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """Per-sample batched naive method: ``odeint(..., batch_axis=0)``
     with direct backprop through the masked solver scan.
@@ -219,7 +265,9 @@ def odeint_naive_batched(
     including the per-element stepsize-search graph the paper
     criticizes.  ``trial_budget`` bounds the scan length (shared across
     elements); defaults to cfg.max_steps * cfg.max_trials.
-    ``interpolate_ts`` as in ``odeint_naive``, per element.
+    ``interpolate_ts`` / ``h0`` / solve-health semantics (including the
+    naive-tape gradient caveat after a fault) as in ``odeint_naive``,
+    per element.
     """
     if cfg is None:
         cfg = ControllerConfig()
@@ -239,10 +287,15 @@ def odeint_naive_batched(
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
     targs = _as_tuple(args)
 
-    h_init = jax.vmap(lambda z: initial_stepsize(
-        f, ts[0], z, targs, solver.order, rtol, atol))(z0)
+    if h0 is None:
+        h_init = jax.vmap(lambda z: initial_stepsize(
+            f, ts[0], z, targs, solver.order, rtol, atol))(z0)
+    else:
+        h_init = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
 
     ys0 = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
+
+    failed0 = _nonfinite_rows((z0, jnp.asarray(h_init, tdt)))
 
     carry0 = dict(
         t=jnp.full((B,), ts[0], tdt), z=z0,
@@ -250,13 +303,16 @@ def odeint_naive_batched(
         prev_ratio=jnp.ones((B,), jnp.float32),
         eval_idx=jnp.ones((B,), jnp.int32),
         n_acc=jnp.zeros((B,), jnp.int32),
+        failed=failed0, uflow=jnp.zeros((B,), bool),
         ys=ys0,
     )
 
     karr = jnp.arange(n_eval)
 
     def body(c, _):
-        done = c["eval_idx"] >= n_eval                      # (B,)
+        # failed rows behave exactly like finished ones: frozen state,
+        # discarded sliver trials until the budget runs out
+        done = (c["eval_idx"] >= n_eval) | c["failed"]      # (B,)
         t, z, h = c["t"], c["z"], c["h"]
         t_target = ts[n_eval - 1] if interpolate_ts else \
             ts[jnp.minimum(c["eval_idx"], n_eval - 1)]
@@ -277,7 +333,14 @@ def odeint_naive_batched(
                               use_pallas=use_pallas, err_scale=(rtol, atol),
                               dense=interpolate_ts)
         ratio = res.err_ratio                               # (B,)
-        accept = (~done) & ((ratio <= 1.0) | (h_use <= h_min * (1 + 1e-3)))
+        railed = h_use <= h_min * (1 + 1e-3)
+        # detection reads stop_gradiented values: the flags must not
+        # add edges to the naive tape (per element)
+        bad = _nonfinite_rows(jax.lax.stop_gradient(res.z_next)) | \
+            ~jnp.isfinite(jax.lax.stop_gradient(ratio))
+        accept = (~done) & ((ratio <= 1.0) | railed) & ~bad
+        fail_now = (~done) & bad & railed
+        uflow_now = accept & railed & (ratio > 1.0)
 
         t_new = t + h_use
         hit = accept & (t_new >= t_target - 16.0 * tiny * jnp.maximum(
@@ -307,8 +370,9 @@ def odeint_naive_batched(
         # through each element's own `ratio` into its h_next.  done
         # rows get a neutral ratio (see odeint_naive: their h_next is
         # discarded, and the h_min-trial ratio's pow jacobian would
-        # overflow f32 under x64 time grids)
-        ratio_h = jnp.where(done, jnp.ones_like(ratio), ratio)
+        # overflow f32 under x64 time grids).  Non-finite ratios get the
+        # same neutral treatment so the h chain cannot absorb a NaN.
+        ratio_h = jnp.where(done | bad, jnp.ones_like(ratio), ratio)
         h_next = propose_stepsize(cfg, h_use, ratio_h, c["prev_ratio"],
                                   solver.order).astype(tdt)
 
@@ -320,21 +384,30 @@ def odeint_naive_batched(
                                  c["prev_ratio"]),
             eval_idx=c["eval_idx"] + eval_advance,
             n_acc=c["n_acc"] + accept.astype(jnp.int32),
+            failed=c["failed"] | fail_now,
+            uflow=c["uflow"] | uflow_now,
             ys=ys,
         )
         return c_new, None
 
     c, _ = jax.lax.scan(body, carry0, None, length=budget)
-    ys_out = c["ys"] if unravel is None else \
-        jax.vmap(jax.vmap(unravel))(c["ys"])
+    fill = c["failed"][None, :] & (karr[:, None] >= c["eval_idx"][None, :])
+    ys_filled = _freeze_fill(c["ys"], fill,
+                             jax.lax.stop_gradient(c["z"]))
+    ys_out = ys_filled if unravel is None else \
+        jax.vmap(jax.vmap(unravel))(ys_filled)
 
+    overflow = c["eval_idx"] < n_eval
+    status = _compose_status(c["failed"], c["uflow"], ~overflow,
+                             jnp.ones((B,), bool))
     evals_per_trial = solver.stages + (
         1 if interpolate_ts and not solver.fsal else 0)
     stats = SolveStats(
         n_steps=jax.lax.stop_gradient(c["n_acc"]),
         n_trials=jnp.full((B,), budget, jnp.int32),
         nfe=jnp.full((B,), budget * evals_per_trial, jnp.int32),
-        overflow=jax.lax.stop_gradient(c["eval_idx"] < n_eval),
+        overflow=jax.lax.stop_gradient(overflow),
+        status=jax.lax.stop_gradient(status),
     )
     return ys_out, stats
 

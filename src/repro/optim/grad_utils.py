@@ -31,12 +31,36 @@ def global_norm(tree: PyTree) -> jnp.ndarray:
                         for l in leaves))
 
 
-def clip_by_global_norm(grads: PyTree, max_norm: float
+def clip_by_global_norm(grads: PyTree, max_norm: float,
+                        on_nonfinite: str = "zero"
                         ) -> Tuple[PyTree, jnp.ndarray]:
+    """Scale ``grads`` so their global norm is at most ``max_norm``.
+
+    Returns (clipped grads, raw global norm).  A non-finite global norm
+    (one Inf/NaN leaf poisons the whole reduction) used to scale every
+    leaf to NaN; now ``on_nonfinite`` picks the recovery: ``"zero"``
+    (default) returns all-zero gradients, ``"keep"`` returns the grads
+    unclipped — either way the *raw* (non-finite) norm is still
+    returned, so a downstream skip-step guard (``train/loop.py``) can
+    see the failure and count it.
+    """
+    if on_nonfinite not in ("zero", "keep"):
+        raise ValueError(
+            f"on_nonfinite must be 'zero' or 'keep'; got {on_nonfinite!r}")
     norm = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
-                                   ).astype(g.dtype), grads), norm
+    finite = jnp.isfinite(norm)
+    safe_norm = jnp.where(finite, norm, jnp.asarray(1.0, norm.dtype))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(safe_norm, 1e-12))
+
+    def clip(g):
+        gc = (g.astype(jnp.float32) * scale).astype(g.dtype)
+        if on_nonfinite == "zero":
+            # select per-leaf against finite: Inf * 0 = NaN, so the bad
+            # branch must never be multiplied
+            return jnp.where(finite, gc, jnp.zeros_like(gc))
+        return jnp.where(finite, gc, g)
+
+    return jax.tree.map(clip, grads), norm
 
 
 class CompressionState(NamedTuple):

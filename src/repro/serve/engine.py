@@ -46,6 +46,9 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step,
                                donate_argnums=(2,)) if jit \
             else model.decode_step
+        # decode iterations executed by the last generate() call —
+        # observability for the eos early-break (and its tests)
+        self.last_decode_steps = 0
 
     def prefill(self, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, PyTree]:
         return self._prefill(self.params, {"tokens": tokens})
@@ -69,16 +72,23 @@ class ServeEngine:
         nxt = self._sample(logits, sub)
         outs.append(nxt[:, None])
         done = jnp.zeros((b,), bool)
+        if self.cfg.eos_id >= 0:
+            # the first sampled token can already be eos — seed `done`
+            # from it so the row stops padding out and an all-finished
+            # batch skips the decode loop entirely
+            done = nxt == self.cfg.eos_id
+        self.last_decode_steps = 0
         for i in range(self.cfg.max_new_tokens - 1):
+            if self.cfg.eos_id >= 0 and bool(done.all()):
+                break
             pos = jnp.asarray(s + i, jnp.int32)
             logits, caches = self._decode(
                 self.params, {"tokens": nxt[:, None]}, caches, pos)
+            self.last_decode_steps += 1
             key, sub = jax.random.split(key)
             nxt = self._sample(logits, sub)
             if self.cfg.eos_id >= 0:
                 done = done | (nxt == self.cfg.eos_id)
                 nxt = jnp.where(done, self.cfg.eos_id, nxt)
             outs.append(nxt[:, None])
-            if self.cfg.eos_id >= 0 and bool(done.all()):
-                break
         return {"tokens": jnp.concatenate(outs, axis=1)}

@@ -51,6 +51,10 @@ class TrainLoopConfig:
     keep_ckpts: int = 3
     straggler_factor: float = 3.0
     log_every: int = 10
+    # skip-step guard: when the loss or raw gradient norm is non-finite
+    # (e.g. a poisoned NODE solve, fp overflow), hold params/opt state
+    # and count the skip in metrics instead of applying a NaN update
+    skip_nonfinite: bool = True
 
 
 def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
@@ -72,6 +76,7 @@ def build_train_step(model: Model, opt: Optimizer,
         return loss, metrics, grads
 
     def step(state: TrainState, batch, comp_state: CompressionState):
+        comp_in = comp_state
         if cfg.microbatches > 1:
             mbs = _split_microbatches(batch, cfg.microbatches)
 
@@ -101,9 +106,24 @@ def build_train_step(model: Model, opt: Optimizer,
         updates, opt_state = opt.update(grads, state.opt_state,
                                         state.params)
         params = apply_updates(state.params, updates)
+        metrics = dict(metrics)
+        if cfg.skip_nonfinite:
+            # skip-step guard: a non-finite loss or raw grad norm means
+            # this update is garbage — hold params/opt/compression state
+            # (the step counter still advances so training can't spin on
+            # one poisoned batch) and surface the skip in metrics.
+            # clip_by_global_norm already zeroed the grads on a bad
+            # norm, so `updates` is finite either way; the selects below
+            # are what make the skip exact.
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            sel = lambda new, old: jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new, old)
+            params = sel(params, state.params)
+            opt_state = sel(opt_state, state.opt_state)
+            comp_state = sel(comp_state, comp_in)
+            metrics["skipped"] = (~ok).astype(jnp.int32)
         new_state = TrainState(step=state.step + 1, params=params,
                                opt_state=opt_state)
-        metrics = dict(metrics)
         metrics["loss"] = loss
         metrics["grad_norm"] = gnorm
         return new_state, comp_state, metrics
@@ -128,6 +148,7 @@ class TrainLoop:
         if jit:
             self._step_fn = jax.jit(self._step_fn, donate_argnums=(0,))
         self.straggler_cb = straggler_cb
+        self.skipped_steps = 0      # total non-finite updates skipped
         self._ema_dt: Optional[float] = None
         self.manager = None
         if cfg.ckpt_dir:
@@ -154,6 +175,8 @@ class TrainLoop:
                 self.state, batch, self.comp_state)
             jax.block_until_ready(metrics["loss"])
             dt = self._clock() - t0
+            if "skipped" in metrics:
+                self.skipped_steps += int(metrics["skipped"])
 
             # straggler watch: EMA of step time, flag outliers
             if self._ema_dt is None:

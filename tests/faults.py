@@ -1,0 +1,69 @@
+"""Deterministic fault injection for solve-health tests.
+
+``faulty_field`` wraps any vector field ``f(t, z, *args)`` so that it
+emits a configured corruption (NaN / Inf / a large finite spike) once
+the integration clock enters a trigger window — deterministic,
+jit-compatible (the trigger is a traced ``jnp.where``, no host
+branching), and usable under every gradient method and batch mode
+because the wrapped field keeps ``f``'s signature exactly.
+
+The corrupted value *replaces* the field output, so a single accepted
+step inside the window is enough to poison the state — which is what
+the solve-health guards must detect (``SolveStatus.NONFINITE_STATE``)
+and freeze.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_KINDS = ("nan", "inf", "spike")
+_SPIKE = 1e30
+
+
+def fault_value(kind: str, dtype=jnp.float32):
+    """The scalar a faulted leaf is overwritten with: ``"nan"`` →
+    NaN, ``"inf"`` → +Inf, ``"spike"`` → 1e30 (finite but large
+    enough that one RK stage overflows the state downstream)."""
+    if kind == "nan":
+        return jnp.asarray(jnp.nan, dtype)
+    if kind == "inf":
+        return jnp.asarray(jnp.inf, dtype)
+    if kind == "spike":
+        return jnp.asarray(_SPIKE, dtype)
+    raise ValueError(f"kind must be one of {_KINDS}; got {kind!r}")
+
+
+def faulty_field(
+    f: Callable,
+    kind: str = "nan",
+    t_ge: float = 0.5,
+    t_until: Optional[float] = None,
+    predicate: Optional[Callable] = None,
+) -> Callable:
+    """Wrap ``f`` to emit ``kind`` whenever ``t`` is in the trigger
+    window ``[t_ge, t_until)`` (``t_until=None`` → open-ended).
+
+    ``predicate(t, z) -> bool array`` further gates the trigger when
+    given (e.g. fault only one batch element by shape-matching ``z``).
+    The corruption is applied leaf-wise with ``jnp.where`` so the
+    wrapper traces under jit/vmap/while_loop like the original field.
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"kind must be one of {_KINDS}; got {kind!r}")
+
+    def wrapped(t, z, *args):
+        out = f(t, z, *args)
+        trig = t >= t_ge
+        if t_until is not None:
+            trig = trig & (t < t_until)
+        if predicate is not None:
+            trig = trig & predicate(t, z)
+        return jax.tree.map(
+            lambda leaf: jnp.where(trig, fault_value(kind, leaf.dtype),
+                                   leaf), out)
+
+    return wrapped
