@@ -13,7 +13,9 @@
                        checkpoint_segments=None, # O(K)-state ACA memory
                        interpolate_ts=False,     # dense-output eval reads
                        h0=None,                  # initial-stepsize override
-                       on_failure="status")      # solve-health policy
+                       on_failure="status",      # solve-health policy
+                       mesh=None,                # shard batch over a Mesh
+                       shard_rules=None)         # AxisRules override
 
 ``f(t, z, *args) -> dz/dt`` over arbitrary pytrees; ``ts`` strictly
 monotone — ascending for a forward solve, or *descending* for a
@@ -33,6 +35,14 @@ its own adaptive grid (own stepsize controller, own accept/reject, own
 checkpoint buffer) instead of one lockstep decision for the whole batch —
 the semantics of ``jax.vmap`` over the unbatched solver, in one fused
 loop.  ``args`` are shared across the batch (their gradient is summed).
+
+With ``mesh=...`` on top of ``batch_axis``, the batched solve is
+``shard_map``-ed over the mesh's data-parallel axes: each device
+integrates its own batch shard with its own while_loop trip count (a
+stiff straggler no longer stalls the whole batch), forward/backward
+sweeps of every gradient method run shard-local, and the one
+cross-device collective is the psum of the shared-``args`` cotangent
+that ``shard_map``'s transpose inserts.  See ``docs/distributed.md``.
 
 ``odeint_dense`` solves once over [t0, t1] and returns a
 ``DenseSolution`` carrying every accepted step's interpolant
@@ -168,6 +178,8 @@ def odeint(
     interpolate_ts: bool = False,
     h0: Optional[Any] = None,
     on_failure: str = "status",
+    mesh: Optional[Any] = None,
+    shard_rules: Optional[Any] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """See module docstring for the solver × grad-method matrix.
 
@@ -266,6 +278,22 @@ def odeint(
     the clock (``dz/ds = -f(-s, z)`` over ascending ``s = -t``): the
     forward trajectory is bit-identical to the negated-time ascending
     solve, and all gradient methods apply unchanged.
+
+    ``mesh=...`` (requires ``batch_axis``) shards the batch over the
+    mesh's data-parallel axes via ``shard_map``: ``z0`` (and a (B,)
+    ``h0``) split along the batch dim, ``ts``/``args`` replicate, and
+    each device runs the per-sample batched engine on its shard with an
+    *independent* while_loop trip count — the forward trajectory, the
+    per-element ``stats`` and the z0-cotangents are exactly the
+    unsharded batched solve's, shard-local end to end, for all four
+    gradient methods; the shared-``args`` gradient additionally crosses
+    devices once (psum of per-shard partial sums, inserted by
+    ``shard_map``'s transpose — associativity reordering can move
+    args-grads by ~1 ulp under naive/mali).  The mesh's batch axes come
+    from ``shard_rules`` (default ``DEFAULT_TRAIN_RULES``: "batch" →
+    ("pod", "data") ∩ mesh axes); the batch size must divide evenly by
+    the shard count.  ``repro.distributed.shard_mesh()`` builds the
+    flat 1-D data mesh over all devices.  See ``docs/distributed.md``.
     """
     if grad_method not in GRAD_METHODS:
         raise ValueError(f"grad_method must be one of {GRAD_METHODS}")
@@ -324,6 +352,12 @@ def odeint(
             f"h0 overrides the adaptive initial-stepsize heuristic; "
             f"fixed-grid solver {tab.name!r} has no stepsize controller "
             "— use steps_per_interval to refine its grid instead")
+    if mesh is not None and batch_axis is None:
+        raise ValueError(
+            "mesh requires batch_axis: sharding distributes the "
+            "per-sample batched solve over the mesh's data axes, so the "
+            "state must carry a batch dimension — pass batch_axis=a "
+            "(or drop mesh for a single-sample solve)")
     if _ts_direction(ts) < 0:
         # reverse time: solve the time-negated problem over ascending -ts
         f, ts = _negate_time(f), -ts
@@ -339,7 +373,8 @@ def odeint(
             steps_per_interval=steps_per_interval,
             trial_budget=trial_budget, use_pallas=use_pallas,
             checkpoint_segments=checkpoint_segments,
-            interpolate_ts=interpolate_ts, h0=h0)
+            interpolate_ts=interpolate_ts, h0=h0,
+            mesh=mesh, shard_rules=shard_rules)
     elif mali:
         out = odeint_mali(f, z0, ts, args, rtol=rtol, atol=atol,
                           cfg=cfg, h0=h0, use_pallas=use_pallas)
@@ -394,6 +429,8 @@ def _odeint_batched(
     checkpoint_segments: Optional[Union[int, str]] = None,
     interpolate_ts: bool = False,
     h0: Optional[jnp.ndarray] = None,
+    mesh: Optional[Any] = None,
+    shard_rules: Optional[Any] = None,
 ) -> Tuple[PyTree, SolveStats]:
     """Batched dispatch behind ``odeint(..., batch_axis=a)``.
 
@@ -401,6 +438,12 @@ def _odeint_batched(
     per-sample batched solvers and fixed grids to the (lossless) shared
     grid with a vmapped field, then restores the caller's batch axis in
     ``ys`` (which sits one axis deeper under the leading time axis).
+    With ``mesh``, the whole dispatch runs inside one ``shard_map`` over
+    the mesh's batch-partition axes — each shard solves its local batch
+    rows independently (own while_loop trip counts, shard-local
+    backward sweeps); only the shared-``args`` cotangent crosses
+    devices, via the psum ``shard_map``'s transpose inserts for
+    replicated inputs.
     """
     flat, _ = jax.tree_util.tree_flatten_with_path(z0)
     if not flat:
@@ -426,56 +469,136 @@ def _odeint_batched(
     z0 = jax.tree.map(
         lambda l, a: jnp.moveaxis(l, a, 0) if a else l, z0, axes)
 
-    if grad_method == "mali":  # tab is None: ALF pair integrator
-        ys, stats = odeint_mali_batched(
-            f, z0, ts, args, rtol=rtol, atol=atol, cfg=cfg, h0=h0,
-            use_pallas=use_pallas)
-    elif tab.adaptive:
-        if grad_method == "aca":
-            ys, stats = odeint_aca_batched(
-                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, h0=h0, use_pallas=use_pallas,
-                checkpoint_segments=checkpoint_segments,
-                interpolate_ts=interpolate_ts)
-        elif grad_method == "adjoint":
-            ys, stats = odeint_adjoint_batched(
-                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, h0=h0, use_pallas=use_pallas,
-                interpolate_ts=interpolate_ts)
+    if mesh is not None:
+        # jax 0.4.x shard_map cannot carry rank-0 custom_vjp residuals
+        # across the shard boundary (grad dies with a _SpecError), and
+        # the engines save ``args`` verbatim in their residuals.  So
+        # promote scalar args leaves to shape (1,) for the engines and
+        # strip the axis again at each field call — user field code
+        # still sees true scalars, and the promoting reshape sits
+        # outside the shard_map so args cotangents come back rank-0.
+        mask = jax.tree.map(lambda x: jnp.ndim(x) == 0, args)
+        if any(jax.tree.leaves(mask)):
+            args = jax.tree.map(
+                lambda x, s: jnp.reshape(jnp.asarray(x), (1,)) if s
+                else x, args, mask)
+            tup_mask = _as_tuple(mask)
+            inner_f = f
+
+            def f(t, z, *a):
+                a = tuple(
+                    jax.tree.map(
+                        lambda x, s: jnp.reshape(x, ()) if s else x,
+                        ai, mi)
+                    for ai, mi in zip(a, tup_mask))
+                return inner_f(t, z, *a)
+
+    def dispatch(z0, ts, args, h0):
+        # batch leads axis 0 of every z0 leaf here; under a mesh this
+        # body runs per shard on the shard-local rows
+        if grad_method == "mali":  # tab is None: ALF pair integrator
+            ys, stats = odeint_mali_batched(
+                f, z0, ts, args, rtol=rtol, atol=atol, cfg=cfg, h0=h0,
+                use_pallas=use_pallas)
+        elif tab.adaptive:
+            if grad_method == "aca":
+                ys, stats = odeint_aca_batched(
+                    f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                    cfg=cfg, h0=h0, use_pallas=use_pallas,
+                    checkpoint_segments=checkpoint_segments,
+                    interpolate_ts=interpolate_ts)
+            elif grad_method == "adjoint":
+                ys, stats = odeint_adjoint_batched(
+                    f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                    cfg=cfg, h0=h0, use_pallas=use_pallas,
+                    interpolate_ts=interpolate_ts)
+            else:
+                ys, stats = odeint_naive_batched(
+                    f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
+                    cfg=cfg, h0=h0, trial_budget=trial_budget,
+                    use_pallas=use_pallas,
+                    interpolate_ts=interpolate_ts)
         else:
-            ys, stats = odeint_naive_batched(
-                f, z0, ts, args, solver=tab, rtol=rtol, atol=atol,
-                cfg=cfg, h0=h0, trial_budget=trial_budget,
-                use_pallas=use_pallas,
-                interpolate_ts=interpolate_ts)
+            # fixed grids are identical for every element — lockstep IS
+            # the per-sample grid; vmap the field over the batched state
+            # and reuse the unbatched front-ends unchanged
+            fb = lambda t, z, *a: jax.vmap(
+                lambda zi: f(t, zi, *a), in_axes=0)(z)
+            if grad_method == "aca":
+                ys, stats = odeint_aca_fixed(
+                    fb, z0, ts, args, solver=tab,
+                    steps_per_interval=steps_per_interval,
+                    use_pallas=use_pallas)
+            elif grad_method == "adjoint":
+                ys, stats = odeint_adjoint_fixed(
+                    fb, z0, ts, args, solver=tab,
+                    steps_per_interval=steps_per_interval,
+                    use_pallas=use_pallas)
+            else:
+                ys, stats = odeint_naive_fixed(
+                    fb, z0, ts, args, solver=tab,
+                    steps_per_interval=steps_per_interval,
+                    use_pallas=use_pallas)
+            b = jax.tree.leaves(z0)[0].shape[0]  # shard-local under mesh
+            stats = SolveStats(*(jnp.broadcast_to(s, (b,)) for s in stats))
+        return ys, stats
+
+    if mesh is None:
+        ys, stats = dispatch(z0, ts, args, h0)
     else:
-        # fixed grids are identical for every element — lockstep IS the
-        # per-sample grid; vmap the field over the batched state and
-        # reuse the unbatched front-ends unchanged
-        fb = lambda t, z, *a: jax.vmap(
-            lambda zi: f(t, zi, *a), in_axes=0)(z)
-        if grad_method == "aca":
-            ys, stats = odeint_aca_fixed(
-                fb, z0, ts, args, solver=tab,
-                steps_per_interval=steps_per_interval,
-                use_pallas=use_pallas)
-        elif grad_method == "adjoint":
-            ys, stats = odeint_adjoint_fixed(
-                fb, z0, ts, args, solver=tab,
-                steps_per_interval=steps_per_interval,
-                use_pallas=use_pallas)
-        else:
-            ys, stats = odeint_naive_fixed(
-                fb, z0, ts, args, solver=tab,
-                steps_per_interval=steps_per_interval,
-                use_pallas=use_pallas)
-        stats = SolveStats(*(jnp.broadcast_to(s, (B,)) for s in stats))
+        ys, stats = _shard_map_solve(
+            dispatch, mesh, shard_rules, z0, ts, args, h0, B)
 
     # ys leaves are (n_eval, B, ...): the batch dim sits one axis deeper
     # than it did in each z0 leaf, under the leading time axis
     ys = jax.tree.map(
         lambda l, a: jnp.moveaxis(l, 1, a + 1) if a else l, ys, axes)
     return ys, stats
+
+
+def _shard_map_solve(dispatch, mesh, shard_rules, z0, ts, args, h0, B):
+    """Wrap the batch-at-axis-0 dispatch in one ``shard_map``.
+
+    Specs: ``z0`` (and a per-element ``h0``) split along dim 0 over the
+    mesh's batch-partition axes; ``ts``/``args`` replicate; ``ys``
+    leaves come back split along dim 1 (batch under the time axis) and
+    ``stats`` fields along dim 0.  Replication checking is off (see
+    ``shard_map_compat``) because the solver engines use ``custom_vjp``
+    internally; the replicated-args cotangent psum is inserted by
+    ``shard_map``'s transpose rule, so no collective appears in this
+    forward code at all.
+    """
+    from jax.sharding import PartitionSpec
+
+    from ..distributed.sharding import batch_partition_axes, \
+        shard_map_compat
+
+    axes = batch_partition_axes(mesh, shard_rules)
+    if not axes:
+        raise ValueError(
+            f"mesh {tuple(mesh.shape.items())} has no data-parallel axis "
+            "to shard the batch over (the sharding rules map 'batch' to "
+            f"{('pod', 'data')}, none of which the mesh carries) — add a "
+            "'data' axis, use repro.distributed.shard_mesh(), or pass "
+            "shard_rules mapping 'batch' onto one of this mesh's axes")
+    n_shard = 1
+    for a in axes:
+        n_shard *= mesh.shape[a]
+    if B % n_shard:
+        raise ValueError(
+            f"batch size {B} does not divide evenly over the mesh's "
+            f"{n_shard} batch shard(s) (axes {axes} of mesh "
+            f"{tuple(mesh.shape.items())}): pad the batch to a multiple "
+            f"of {n_shard} or drop devices from the mesh")
+    dspec = axes[0] if len(axes) == 1 else axes
+    bspec = PartitionSpec(dspec)   # batch-leading arrays: split dim 0
+    rspec = PartitionSpec()        # replicated
+    h0_spec = rspec if (h0 is None or jnp.ndim(h0) == 0) else bspec
+    sharded = shard_map_compat(
+        dispatch, mesh=mesh,
+        in_specs=(bspec, rspec, rspec, h0_spec),
+        out_specs=(PartitionSpec(None, dspec), bspec))
+    return sharded(z0, ts, args, h0)
 
 
 def _time_dtype(*times) -> jnp.dtype:

@@ -731,6 +731,12 @@ def batched_adaptive_while_solve(
     reverse-differentiable (while_loop) — wrap in custom_vjp (ACA /
     adjoint) or use only for inference.
 
+    Batch rows never interact (no cross-element reduction anywhere in
+    the loop), so the solve is embarrassingly parallel over B: running
+    it on a batch *shard* yields exactly the shard's rows of the full
+    solve, with a shard-local trip count — the property
+    ``odeint(..., mesh=...)`` builds its ``shard_map`` sharding on.
+
     Each iteration advances every *live* element one ψ trial with its own
     trial stepsize; per-element accept/reject masks (``jnp.where``
     freezing, h = 0 for dead rows) keep rejected and finished elements

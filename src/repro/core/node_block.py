@@ -77,6 +77,14 @@ class NodeConfig:
     # functionalize jitted callers with checkify.checkify); see
     # docs/robustness.md
     on_failure: str = "status"
+    # jax.sharding.Mesh to shard the batch over (requires batch_axis):
+    # the block's solve runs shard_map-ed over the mesh's data axes —
+    # per-device adaptive trip counts, shard-local backward sweeps, one
+    # psum on the shared-params cotangent.  See docs/distributed.md.
+    mesh: Optional[Any] = None
+    # AxisRules override for the mesh's batch-partition axes (None =
+    # DEFAULT_TRAIN_RULES: "batch" -> ("pod", "data"))
+    shard_rules: Optional[Any] = None
 
 
 def node_block_apply(
@@ -112,6 +120,7 @@ def node_block_apply(
             # the api's informative error instead of silently ignoring
             checkpoint_segments=cfg.checkpoint_segments,
             on_failure=cfg.on_failure,
+            mesh=cfg.mesh, shard_rules=cfg.shard_rules,
         )
     else:
         zT, _ = odeint_final(
@@ -126,6 +135,7 @@ def node_block_apply(
             batch_axis=cfg.batch_axis,
             checkpoint_segments=cfg.checkpoint_segments,
             on_failure=cfg.on_failure,
+            mesh=cfg.mesh, shard_rules=cfg.shard_rules,
         )
     return zT
 

@@ -31,6 +31,13 @@ the backward re-integrates each segment from its snapshot with the
 from O(N_f) to O(K + N_f/K) at ~1 extra ψ per step, with gradients
 bit-identical to the full buffer (no re-search, so the replayed
 trajectory is the forward trajectory).  See ``docs/memory.md``.
+
+Sharding contract (relied on by ``odeint(..., mesh=...)``): the batched
+engine's forward search, checkpoint buffer and backward replay touch
+each batch row independently — no cross-element reduction anywhere —
+so a batch shard replays **shard-local** under ``shard_map`` and the
+only cross-device traffic is the psum of the shared-``args`` cotangent
+inserted by the transpose.  See ``docs/distributed.md``.
 """
 
 from __future__ import annotations

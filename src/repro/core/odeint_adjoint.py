@@ -13,6 +13,13 @@ trajectory by the truncation-error term of Theorem 3.2
 (e_k = DΦ + (−1)^{p+1}(DΦ)^{-1} ≠ 0), producing the systematic gradient
 error that ACA eliminates.  This implementation exists so the paper's
 comparisons (Fig. 6, Table 1/2/4/5) are reproducible like-for-like.
+
+Sharding contract (relied on by ``odeint(..., mesh=...)``): the batched
+backward re-integration is per-row (each element's augmented system has
+its own controller), so it runs **shard-local** under ``shard_map``;
+the summed ``θ``-cotangent ḡ is a per-shard partial sum that crosses
+devices exactly once, in the psum ``shard_map``'s transpose inserts
+for replicated ``args``.  See ``docs/distributed.md``.
 """
 
 from __future__ import annotations

@@ -37,6 +37,12 @@ Theorem 3.2 pathology) and no per-step state storage (ACA's memory
 cost).  Each backward step costs one inverse ALF step plus one
 vjp-replayed float step ≈ 3 field evaluations.
 
+Sharding contract (relied on by ``odeint(..., mesh=...)``): the batched
+reverse reconstruction inverts each row's own lattice pair along its
+own scalar grid — no cross-element coupling — so the sweep runs
+**shard-local** under ``shard_map``, with the shared-``args`` cotangent
+psummed once by the transpose.  See ``docs/distributed.md``.
+
 See ``docs/method-selection.md`` for where MALI wins and loses against
 aca / aca+segments / adjoint / naive.
 """

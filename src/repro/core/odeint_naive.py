@@ -12,6 +12,11 @@ adaptive naive solver is a *bounded* ``lax.scan`` over the flattened
 trial/accept loop with where-masking once integration finishes — the
 standard fixed-budget encoding; the budget (max_steps × max_trials) plays
 the role of the tape length.
+
+Sharding contract (relied on by ``odeint(..., mesh=...)``): the batched
+scan tape is per-row, so reverse-mode AD through it is **shard-local**
+under ``shard_map``; only the shared-``args`` cotangent crosses devices
+(one psum from the transpose).  See ``docs/distributed.md``.
 """
 
 from __future__ import annotations

@@ -4,9 +4,14 @@ from .sharding import (
     AxisRules,
     DEFAULT_TRAIN_RULES,
     DEFAULT_SERVE_RULES,
+    batch_partition_axes,
+    batch_shard_count,
+    data_axis_names,
     logical_to_spec,
     shard,
     make_named_sharding,
+    shard_map_compat,
+    shard_mesh,
     spec_tree_for,
 )
 
@@ -14,8 +19,13 @@ __all__ = [
     "AxisRules",
     "DEFAULT_TRAIN_RULES",
     "DEFAULT_SERVE_RULES",
+    "batch_partition_axes",
+    "batch_shard_count",
+    "data_axis_names",
     "logical_to_spec",
     "shard",
     "make_named_sharding",
+    "shard_map_compat",
+    "shard_mesh",
     "spec_tree_for",
 ]

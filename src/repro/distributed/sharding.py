@@ -210,6 +210,61 @@ def data_axis_names(mesh: Optional[Mesh]) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def batch_partition_axes(mesh: Optional[Mesh],
+                         rules: Optional[AxisRules] = None
+                         ) -> Tuple[str, ...]:
+    """Physical mesh axes the logical ``"batch"`` axis shards over.
+
+    The rule table's ``"batch"`` entry (``("pod", "data")`` by default)
+    intersected with the mesh's actual axis names — empty when the mesh
+    carries no data-parallel axis at all (e.g. a pure-TP mesh).
+    """
+    rules = DEFAULT_TRAIN_RULES if rules is None else rules
+    v = _filter_axes(rules.get("batch"), mesh)
+    if v is None:
+        return ()
+    return (v,) if isinstance(v, str) else tuple(v)
+
+
+def batch_shard_count(mesh: Optional[Mesh],
+                      rules: Optional[AxisRules] = None) -> int:
+    """Number of batch shards ``odeint(..., mesh=...)`` splits into
+    (the product of the mesh's batch-partition axis sizes; 1 when the
+    mesh has no data axis or is None)."""
+    n = 1
+    for a in batch_partition_axes(mesh, rules):
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """Flat 1-D ``("data",)`` mesh over all (or the given) devices.
+
+    The simplest mesh ``odeint(..., mesh=...)`` accepts: every device is
+    a batch shard, no model parallelism.  A function (never a constant)
+    so importing this module touches no jax device state.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    return jax.make_mesh((len(devices),), ("data",), devices=devices)
+
+
+def shard_map_compat(fn, *, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=...)``; the pinned
+    0.4.x line only has ``jax.experimental.shard_map.shard_map(...,
+    check_rep=...)``.  Replication checking is disabled either way: the
+    solver bodies run custom_vjp interiors the checker cannot see
+    through, and the model shard_fns psum manually.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def model_axis_size(mesh: Optional[Mesh]) -> int:
     if mesh is None or "model" not in mesh.axis_names:
         return 1

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import shard, shard_map_compat
 from .common import ParamDef, apply_rope, dense
 from .config import ModelConfig, RunConfig
 
@@ -236,14 +236,13 @@ def decode_attention(q, k_cache, v_cache, valid, *,
         o_g = jax.lax.psum(o * corr[..., None], "model")
         return o_g / jnp.maximum(l_g[..., None], 1e-30)
 
-    out = jax.shard_map(
+    out = shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(P(bspec, None, None, None),
                   P(bspec, "model", None, None),
                   P(bspec, "model", None, None),
                   P(bspec, "model")),
         out_specs=P(bspec, None, None),
-        check_vma=False,
     )(q, k_cache, v_cache, valid)
     return out[:, None].astype(q.dtype)             # (B,1,H,dh)
 

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import logical_to_spec, shard
+from repro.distributed.sharding import (logical_to_spec, shard,
+                                        shard_map_compat)
 from .common import ParamDef, activation, dense
 from .config import ModelConfig, RunConfig
 from .ffn import ffn_apply, ffn_defs
@@ -192,12 +193,11 @@ def moe_apply(
             y = jax.lax.psum(y, "model")
             return y.reshape(bl, sl, d)
 
-        y = jax.shard_map(
+        y = shard_map_compat(
             shard_fn, mesh=mesh,
             in_specs=(P(bspec, None, None), P(bspec, None, None),
                       P(bspec, None, None), wspec, wspec, wspec_out),
             out_specs=P(bspec, None, None),
-            check_vma=False,
         )(x, ids, gates, p["w_gate"], p["w_in"], p["w_out"])
     else:
         t_local = b * s

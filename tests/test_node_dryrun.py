@@ -1,0 +1,85 @@
+"""Dryrun/roofline coverage on ODE workloads (``launch/node_dryrun.py``).
+
+Golden-file test: the ``run_cell``-style NODE dry-run must emit the
+report structure pinned in ``tests/golden/node_dryrun_keys.json`` with
+*finite* bytes/FLOPs/collective numbers, and ``analyze_hlo`` must see
+the expected psum (an ``all-reduce``) in the **adjoint** sharded
+backward — the one collective the shared-args cotangent crosses
+devices with.  The serve (forward-only) cell must show *no* all-reduce
+at all: the forward solve is embarrassingly parallel.
+
+The cells compile on 8 forced host devices, so the measurement runs in
+a subprocess (device count locks at jax init); the parent validates
+the JSON reports against the golden schema.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+
+from repro.launch.node_dryrun import run_node_cell
+
+reports = [
+    run_node_cell("train", batch=16, dim=8, grad_method="adjoint",
+                  save=False),
+    run_node_cell("serve", batch=16, dim=8, grad_method="aca",
+                  save=False),
+]
+print("REPORTS=" + json.dumps(reports))
+"""
+
+
+def _finite(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and x == x and abs(x) != float("inf")
+
+
+def test_node_dryrun_reports_match_golden():
+    env = dict(os.environ)
+    root = os.path.dirname(_HERE)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    lines = [ln for ln in r.stdout.splitlines()
+             if ln.startswith("REPORTS=")]
+    assert lines, (r.stdout[-2000:], r.stderr[-4000:])
+    train, serve = json.loads(lines[-1][len("REPORTS="):])
+
+    with open(os.path.join(_HERE, "golden",
+                           "node_dryrun_keys.json")) as fh:
+        golden = json.load(fh)
+
+    for rep in (train, serve):
+        for k in golden["report"]:
+            assert k in rep, (rep["cell"], k)
+        for k in golden["measured"]:
+            assert k in rep["measured"], (rep["cell"], k)
+        for k in golden["hlo_static"]:
+            assert _finite(rep["hlo_static"][k]), (rep["cell"], k)
+        for k in golden["roofline_finite"]:
+            assert _finite(rep["roofline"][k]), (rep["cell"], k)
+        # a healthy measured solve, with a real dynamic-trip while loop
+        assert rep["measured"]["all_ok"] is True
+        assert rep["measured"]["while_trips_straggler"] >= 1
+        assert rep["measured"]["nfe_total"] > 0
+        assert rep["hlo_static"]["dynamic_whiles"] >= 1
+        # the verdict this dry-run exists to assert: never
+        # collective-bound (the args-psum is one small transfer)
+        assert rep["collective_bound"] is False
+
+    # the adjoint train cell's backward crosses devices exactly through
+    # the shared-args cotangent psum — analyze_hlo must see it
+    assert train["roofline"]["coll_by_kind"].get("all-reduce", 0) > 0, \
+        train["roofline"]["coll_by_kind"]
+    # the forward-only serve cell has nothing to reduce
+    assert serve["roofline"]["coll_by_kind"].get("all-reduce", 0) == 0, \
+        serve["roofline"]["coll_by_kind"]
