@@ -1,0 +1,38 @@
+"""Static analysis for the solver stack (``solver-lint``).
+
+Two layers prove the invariants CI's runtime tests only sample:
+
+* :mod:`repro.analysis.rules_jaxpr` traces every registered entry-point
+  configuration (:mod:`repro.analysis.entry_points`) without executing
+  and checks residual-memory budgets, collective placement, dtype
+  contracts, and host-sync discipline on the jaxprs.
+* :mod:`repro.analysis.ast_lint` lints the repo source for the
+  shard_map-compat, bare-assert, trace-time-leak, and registry-drift
+  bug classes.
+
+Run ``python -m repro.analysis`` (jaxpr layer) and
+``python -m tools.solver_lint src/`` (AST layer); both honor the shared
+baseline file ``tools/solver_lint_baseline.json``.  See
+``docs/static-analysis.md``.
+"""
+
+from .findings import BaselineEntry, Finding, Report, load_baseline
+from .entry_points import MATRIX, SolveConfig, config_names, get_config
+from .rules_jaxpr import analyze_config, analyze_matrix, static_residual_bytes
+from .ast_lint import lint_file, lint_paths
+
+__all__ = [
+    "BaselineEntry",
+    "Finding",
+    "Report",
+    "load_baseline",
+    "MATRIX",
+    "SolveConfig",
+    "config_names",
+    "get_config",
+    "analyze_config",
+    "analyze_matrix",
+    "static_residual_bytes",
+    "lint_file",
+    "lint_paths",
+]

@@ -1,0 +1,90 @@
+"""CLI for the jaxpr analyzer layer: ``python -m repro.analysis``.
+
+Traces the registered entry-point matrix (or a ``--configs`` subset)
+without executing anything and runs the four jaxpr rule passes.  Exits
+nonzero on any finding not covered by the baseline file.  Pallas
+configs trace in interpret mode, so no accelerator is needed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr static analysis over the solver entry-point matrix",
+    )
+    parser.add_argument(
+        "--configs",
+        default=None,
+        help="comma-separated config names (default: the full matrix); "
+        "see --list",
+    )
+    parser.add_argument(
+        "--list", action="store_true", help="list registered config names and exit"
+    )
+    parser.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline/suppression JSON (default: tools/solver_lint_baseline.json "
+        "if present)",
+    )
+    parser.add_argument(
+        "--report", default=None, help="also write the findings report to this file"
+    )
+    parser.add_argument(
+        "-v", "--verbose", action="store_true", help="show suppressed findings too"
+    )
+    args = parser.parse_args(argv)
+
+    # pallas configs must trace in interpret mode off-accelerator
+    os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+    from repro.analysis import (
+        MATRIX,
+        Report,
+        analyze_config,
+        config_names,
+        get_config,
+        load_baseline,
+    )
+
+    if args.list:
+        print("\n".join(config_names()))
+        return 0
+
+    baseline = ()
+    baseline_path = args.baseline
+    if baseline_path is None:
+        default = os.path.join("tools", "solver_lint_baseline.json")
+        baseline_path = default if os.path.exists(default) else None
+    if baseline_path:
+        baseline = load_baseline(baseline_path)
+
+    if args.configs:
+        configs = [get_config(n.strip()) for n in args.configs.split(",") if n.strip()]
+    else:
+        configs = list(MATRIX)
+
+    report = Report(baseline=baseline)
+    for cfg in configs:
+        t0 = time.monotonic()
+        report.extend(analyze_config(cfg))
+        dt = time.monotonic() - t0
+        print(f"analyzed {cfg.name} ({dt:.1f}s)", file=sys.stderr)
+
+    text = report.render(verbose=args.verbose)
+    print(text)
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

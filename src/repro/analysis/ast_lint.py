@@ -1,0 +1,348 @@
+"""AST-level repo lint: solver-stack rules plain grep can't state.
+
+Rules (each one is a bug class a previous PR actually hit):
+
+* ``shard-map-direct`` — calling ``jax.shard_map`` /
+  ``jax.experimental.shard_map`` anywhere except the version-compat
+  wrapper ``repro.distributed.sharding.shard_map_compat`` (the PR 7 bug
+  class: the raw API's signature differs across the pinned jax line).
+* ``bare-assert`` — ``assert`` used for validation: asserts vanish
+  under ``python -O`` and produce unnamed errors; user-reachable checks
+  must raise named ValueErrors (the ``elastic_mesh`` bug class).
+  Internal kernel-wrapper invariants may be baselined with justification.
+* ``jit-host-leak`` — ``.item()``, ``np.``-namespace calls, or
+  ``float(...)``/``int(...)`` applied to computed values inside the
+  jitted engine modules: these force a host sync or silently freeze a
+  traced value at trace time.  Static (trace-time) index-plan
+  construction is the intentional exception, baselined per site.
+* ``registry-drift`` — string literals in ``core/api.py`` (defaults,
+  comparisons, fallback-ladder rungs, ``get_tableau`` calls) that no
+  longer resolve against the live ``GRAD_METHODS`` /
+  ``ON_FAILURE_POLICIES`` / tableau registries.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List
+
+from .findings import Finding
+
+#: files allowed to touch the raw shard_map API
+SHARD_MAP_COMPAT_FILES = ("distributed/sharding.py",)
+
+#: modules whose function bodies run inside jit on the solve hot path
+ENGINE_FILE_SUFFIXES = tuple(
+    f"core/{m}.py"
+    for m in (
+        "integrate",
+        "stepper",
+        "controller",
+        "odeint_aca",
+        "odeint_adjoint",
+        "odeint_naive",
+        "odeint_mali",
+    )
+)
+
+#: solver names dispatched at the api level rather than the tableau registry
+NON_TABLEAU_SOLVERS = frozenset({"alf"})
+
+
+def _rel(path: str, root: str) -> str:
+    try:
+        return os.path.relpath(path, root)
+    except ValueError:
+        return path
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _is_engine_file(path: str) -> bool:
+    p = _norm(path)
+    return p.endswith(ENGINE_FILE_SUFFIXES) or (
+        "/kernels/" in p and p.endswith(".py") and not p.endswith("__init__.py")
+    )
+
+
+def _source_line(lines: List[str], lineno: int) -> str:
+    if 1 <= lineno <= len(lines):
+        return lines[lineno - 1].strip()
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# per-file rules
+
+
+def _check_shard_map_direct(tree, rel, lines) -> List[Finding]:
+    if _norm(rel).endswith(SHARD_MAP_COMPAT_FILES):
+        return []
+    out = []
+
+    def hit(node, what):
+        out.append(
+            Finding(
+                rule="shard-map-direct",
+                path=rel,
+                line=node.lineno,
+                message=(
+                    f"{what}: call shard_map only through "
+                    "repro.distributed.sharding.shard_map_compat (the raw "
+                    "API's signature differs across jax versions)"
+                ),
+                snippet=_source_line(lines, node.lineno),
+            )
+        )
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if "shard_map" in mod:
+                hit(node, f"direct import from {mod!r}")
+            elif mod == "jax" and any(a.name == "shard_map" for a in node.names):
+                hit(node, "direct import of jax.shard_map")
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if "shard_map" in alias.name:
+                    hit(node, f"direct import of {alias.name!r}")
+        elif isinstance(node, ast.Attribute) and node.attr == "shard_map":
+            # jax.shard_map / jax.experimental.shard_map.shard_map
+            base = node.value
+            dotted = []
+            while isinstance(base, ast.Attribute):
+                dotted.append(base.attr)
+                base = base.value
+            if isinstance(base, ast.Name) and base.id == "jax":
+                hit(node, "direct jax shard_map attribute access")
+    return out
+
+
+def _check_bare_assert(tree, rel, lines) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            out.append(
+                Finding(
+                    rule="bare-assert",
+                    path=rel,
+                    line=node.lineno,
+                    message=(
+                        "bare assert: validation must raise a named "
+                        "ValueError (asserts vanish under python -O); "
+                        "baseline internal invariants with justification"
+                    ),
+                    snippet=_source_line(lines, node.lineno),
+                )
+            )
+    return out
+
+
+def _check_jit_host_leak(tree, rel, lines) -> List[Finding]:
+    if not _is_engine_file(rel):
+        return []
+    out = []
+
+    def hit(node, what):
+        out.append(
+            Finding(
+                rule="jit-host-leak",
+                path=rel,
+                line=node.lineno,
+                message=(
+                    f"{what} in a jitted engine module: host syncs or "
+                    "trace-time freezes of traced values; baseline "
+                    "intentional static index plans with justification"
+                ),
+                snippet=_source_line(lines, node.lineno),
+            )
+        )
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "item":
+                hit(node, ".item() call")
+            elif (
+                isinstance(fn, ast.Name)
+                and fn.id in ("float", "int")
+                and node.args
+                and isinstance(node.args[0], (ast.Call, ast.Subscript))
+            ):
+                hit(node, f"{fn.id}() applied to a computed value")
+        elif isinstance(node, ast.Attribute):
+            base = node.value
+            if isinstance(base, ast.Name) and base.id in ("np", "numpy"):
+                hit(node, f"numpy host op 'np.{node.attr}'")
+    return out
+
+
+def _collect_solver_strings(value) -> List[ast.Constant]:
+    """Constant strings an assignment can bind to a registry-named variable.
+
+    Only literal strings and conditional chains of them count
+    (``solver = "alf" if ... else "dopri5"``); strings buried in the
+    condition or in arbitrary calls (``akw.get("solver")``) are not
+    values being bound and are ignored.
+    """
+    if isinstance(value, ast.Constant) and isinstance(value.value, str):
+        return [value]
+    if isinstance(value, ast.IfExp):
+        return _collect_solver_strings(value.body) + _collect_solver_strings(
+            value.orelse
+        )
+    return []
+
+
+def _check_registry_drift(tree, rel, lines) -> List[Finding]:
+    if not _norm(rel).endswith("core/api.py"):
+        return []
+    from repro.core.api import GRAD_METHODS, ON_FAILURE_POLICIES
+    from repro.core.tableaus import get_tableau
+
+    def solver_ok(name: str) -> bool:
+        if name in NON_TABLEAU_SOLVERS:
+            return True
+        try:
+            get_tableau(name)
+            return True
+        except KeyError:
+            return False
+
+    checkers = {
+        "solver": (solver_ok, "tableau registry (or 'alf')"),
+        "grad_method": (lambda s: s in GRAD_METHODS, f"GRAD_METHODS={GRAD_METHODS}"),
+        "on_failure": (
+            lambda s: s in ON_FAILURE_POLICIES,
+            f"ON_FAILURE_POLICIES={ON_FAILURE_POLICIES}",
+        ),
+    }
+
+    out = []
+
+    def hit(node, key, value):
+        _ok, registry = checkers[key]
+        out.append(
+            Finding(
+                rule="registry-drift",
+                path=rel,
+                line=node.lineno,
+                message=(
+                    f"string {value!r} for {key!r} does not resolve against "
+                    f"the live {registry}"
+                ),
+                snippet=_source_line(lines, node.lineno),
+            )
+        )
+
+    def check(node, key, value):
+        ok, _ = checkers[key]
+        if not ok(value):
+            hit(node, key, value)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Dict):
+            # fallback-ladder rungs: {"solver": ..., "grad_method": ...}
+            for k, v in zip(node.keys, node.values):
+                if (
+                    isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)
+                    and k.value in checkers
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                ):
+                    check(v, k.value, v.value)
+        elif isinstance(node, ast.Compare) and isinstance(node.left, ast.Name):
+            key = node.left.id
+            if key in checkers:
+                for comp in node.comparators:
+                    if isinstance(comp, ast.Constant) and isinstance(comp.value, str):
+                        check(comp, key, comp.value)
+        elif isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name) and target.id in checkers:
+                    for const in _collect_solver_strings(node.value):
+                        check(const, target.id, const.value)
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            fname = fn.id if isinstance(fn, ast.Name) else getattr(fn, "attr", "")
+            if fname == "get_tableau" and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                    check(arg, "solver", arg.value)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # keyword defaults like solver="dopri5", grad_method="aca"
+            a = node.args
+            pos = a.posonlyargs + a.args
+            for arg, default in zip(pos[len(pos) - len(a.defaults) :], a.defaults):
+                if (
+                    arg.arg in checkers
+                    and isinstance(default, ast.Constant)
+                    and isinstance(default.value, str)
+                ):
+                    check(default, arg.arg, default.value)
+            for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+                if (
+                    default is not None
+                    and arg.arg in checkers
+                    and isinstance(default, ast.Constant)
+                    and isinstance(default.value, str)
+                ):
+                    check(default, arg.arg, default.value)
+    return out
+
+
+RULES = (
+    _check_shard_map_direct,
+    _check_bare_assert,
+    _check_jit_host_leak,
+    _check_registry_drift,
+)
+
+
+def lint_file(path: str, root: str = ".") -> List[Finding]:
+    rel = _norm(_rel(path, root))
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [
+            Finding(
+                rule="syntax",
+                path=rel,
+                line=exc.lineno or 0,
+                message=f"file does not parse: {exc.msg}",
+                snippet="",
+            )
+        ]
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    for rule in RULES:
+        findings += rule(tree, rel, lines)
+    return findings
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                for fn in filenames:
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+        elif p.endswith(".py"):
+            out.append(p)
+    return sorted(out)
+
+
+def lint_paths(paths: Iterable[str], root: str = ".") -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        findings += lint_file(path, root)
+    return findings

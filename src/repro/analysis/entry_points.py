@@ -1,0 +1,183 @@
+"""Registered solver entry points for the static analyzer.
+
+The analyzer proves invariants by *tracing* (never executing) every
+public solve configuration: 4 gradient methods × {solo, batched} ×
+{pytree, pallas-interpret} × {full, segmented checkpoints} × {plain,
+mesh-sharded}, plus the documented ``on_failure="warn"`` site.  Each
+:class:`SolveConfig` knows how to build its undifferentiated forward
+trace (where the engine ``custom_vjp`` is visible, residuals and all)
+and its gradient trace (where the backward sweeps' loops and the
+shard_map-transpose collectives appear).
+
+Shapes are chosen so the residual budget is *discriminating*: the state
+terms (``dim``-sized buffers) dominate the scalar grid and ``args``
+bytes, so a rogue O(N·dim) buffer sneaking into MALI or segmented-ACA
+residuals blows the gate rather than hiding in slack.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# configuration
+
+
+@dataclass(frozen=True)
+class SolveConfig:
+    """One analyzable entry-point configuration."""
+
+    name: str
+    grad_method: str
+    use_pallas: bool = False
+    batched: bool = False
+    sharded: bool = False
+    segmented: bool = False
+    on_failure: str = "status"
+    dim: int = 96
+    batch: int = 8
+    n_eval: int = 2
+    max_steps: int = 64
+    segments: int = 8
+
+    def odeint_kwargs(self) -> dict:
+        kw: dict = dict(
+            grad_method=self.grad_method,
+            max_steps=self.max_steps,
+            use_pallas=self.use_pallas,
+            on_failure=self.on_failure,
+        )
+        if self.segmented:
+            kw["checkpoint_segments"] = self.segments
+        if self.batched:
+            kw["batch_axis"] = 0
+        if self.sharded:
+            from repro.distributed import shard_mesh
+
+            kw["mesh"] = shard_mesh()
+        return kw
+
+    def example_args(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        z_shape = (self.batch, self.dim) if self.batched else (self.dim,)
+        z0 = jnp.zeros(z_shape, jnp.float32)
+        w = jnp.zeros((self.dim,), jnp.float32)
+        ts = jnp.linspace(0.0, 1.0, self.n_eval).astype(jnp.float32)
+        return z0, w, ts
+
+    def _solve_fn(self):
+        from repro.core.api import odeint
+
+        kw = self.odeint_kwargs()
+
+        def field_fn(t, z, w):
+            return -(w * z)
+
+        def solve(z0, w, ts):
+            return odeint(field_fn, z0, ts, (w,), **kw)
+
+        return solve
+
+    def forward_trace(self):
+        """Undifferentiated trace — engine ``custom_vjp`` residuals visible."""
+        solve = self._solve_fn()
+        return jax.make_jaxpr(solve)(*self.example_args())
+
+    def grad_trace(self):
+        """Gradient trace — backward loops and transpose collectives visible."""
+        solve = self._solve_fn()
+
+        def loss(z0, w, ts):
+            ys, _stats = solve(z0, w, ts)
+            return jnp.sum(ys)
+
+        return jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(*self.example_args())
+
+    # -- residual budget ----------------------------------------------------
+
+    #: per-element dim-sized state slots each method may keep as residuals
+    #: (the paper's memory claims, in slot units):
+    #:   aca full       -> max_steps          (every accepted state)
+    #:   aca segmented  -> 2 * K              (K z-snapshots + K k0-snapshots)
+    #:   adjoint        -> n_eval             (only the outputs ys)
+    #:   mali           -> 4                  (zT, vT, z0 + slack: O(1) in steps)
+    #: naive has no engine-level custom_vjp (pure autodiff tape) -> no budget.
+    RESIDUAL_SLACK = 1.5
+    GRID_BYTES_PER_STEP = 48  # scalar t/h/index grid allowance per accepted step
+
+    def state_slots(self) -> Optional[int]:
+        if self.grad_method == "aca":
+            return 2 * self.segments if self.segmented else self.max_steps
+        if self.grad_method == "adjoint":
+            return self.n_eval
+        if self.grad_method == "mali":
+            return 4
+        return None  # naive
+
+    def residual_budget_bytes(self) -> Optional[int]:
+        slots = self.state_slots()
+        if slots is None:
+            return None
+        n_elem = self.batch if self.batched else 1
+        state = slots * self.dim * 4  # f32
+        grid = self.max_steps * self.GRID_BYTES_PER_STEP
+        args_ts = self.dim * 4 + self.n_eval * 4 + 64
+        return int(self.RESIDUAL_SLACK * n_elem * (state + grid) + args_ts + 4096)
+
+
+# ---------------------------------------------------------------------------
+# the matrix
+
+
+def _base_configs() -> list:
+    return [
+        SolveConfig("aca-full", "aca"),
+        SolveConfig("aca-seg", "aca", segmented=True),
+        SolveConfig("adjoint", "adjoint"),
+        SolveConfig("naive", "naive"),
+        SolveConfig("mali", "mali"),
+    ]
+
+
+def build_matrix() -> list:
+    """The full registered matrix (31 configs)."""
+    out = []
+    for base in _base_configs():
+        for pallas in (False, True):
+            tag = "-pallas" if pallas else ""
+            solo = replace(base, name=f"{base.name}{tag}-solo", use_pallas=pallas)
+            bat = replace(
+                base, name=f"{base.name}{tag}-batched", use_pallas=pallas, batched=True
+            )
+            shd = replace(
+                base,
+                name=f"{base.name}{tag}-sharded",
+                use_pallas=pallas,
+                batched=True,
+                sharded=True,
+            )
+            out.extend([solo, bat, shd])
+    # the documented jax.debug.print warn site must stay analyzable (and
+    # stay *outside* any loop body — the host-sync pass checks exactly this)
+    out.append(SolveConfig("aca-full-warn", "aca", on_failure="warn"))
+    return out
+
+
+MATRIX = build_matrix()
+_BY_NAME = {c.name: c for c in MATRIX}
+
+
+def get_config(name: str) -> SolveConfig:
+    if name not in _BY_NAME:
+        raise KeyError(
+            f"unknown analyzer config {name!r}; registered: {sorted(_BY_NAME)}"
+        )
+    return _BY_NAME[name]
+
+
+def config_names() -> list:
+    return [c.name for c in MATRIX]

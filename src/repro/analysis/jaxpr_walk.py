@@ -1,0 +1,171 @@
+"""Jaxpr traversal and provenance utilities for the static analyzer.
+
+The rule passes in :mod:`repro.analysis.rules_jaxpr` need three
+capabilities that plain ``jax.make_jaxpr`` output does not hand them
+directly:
+
+* **Depth-aware equation iteration** — every primitive equation in a
+  closed jaxpr, recursively through sub-jaxprs (``while``/``scan``
+  bodies, ``cond`` branches, ``pjit``/``shard_map``/``custom_vjp``
+  callees), annotated with how many ``while``/``scan`` loop bodies
+  enclose it.  "No collectives inside the solver loop" is a statement
+  about loop depth, not mere presence.
+
+* **User-frame provenance** — findings must point at the repo source
+  line that introduced the offending primitive, not at jax internals.
+  ``jax._src.source_info_util.user_frames`` filters the traceback down
+  to non-jax frames; we take the innermost one.
+
+* **Residual recovery from ``custom_vjp``** — in an *undifferentiated*
+  forward trace, each solver engine shows up as one
+  ``custom_vjp_call_jaxpr`` equation whose ``fwd_jaxpr_thunk`` can be
+  forced (with all-symbolic-zero flags) to yield the forward jaxpr.
+  Its outputs are ordered **residuals first, then primal outputs**, and
+  ``out_trees()`` gives the residual pytree structure, so residual
+  avals can be unflattened back into named leaves (``.ckpts.z`` etc.)
+  without executing anything.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterator, Tuple
+
+import jax
+import jax.tree_util as jtu
+
+try:  # jax 0.4.x private module; guarded so import errors degrade gracefully
+    from jax._src import source_info_util
+except Exception:  # pragma: no cover - exercised only on incompatible jax
+    source_info_util = None
+
+
+#: primitive names whose sub-jaxprs execute once per loop iteration
+LOOP_PRIMS = ("while", "scan")
+
+
+def _sub_jaxprs(value: Any) -> Iterator[Any]:
+    """Yield every (open) jaxpr reachable from one eqn-param value."""
+    if hasattr(value, "jaxpr"):  # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):  # open Jaxpr
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def iter_eqns(jaxpr, loop_depth: int = 0) -> Iterator[Tuple[Any, int]]:
+    """Yield ``(eqn, loop_depth)`` for every equation, recursively.
+
+    ``loop_depth`` counts enclosing ``while``/``scan`` bodies (the cond
+    jaxpr of a ``while`` also runs per iteration and counts as inside).
+    Accepts an open or closed jaxpr.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn, loop_depth
+        child = loop_depth + 1 if eqn.primitive.name in LOOP_PRIMS else loop_depth
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                yield from iter_eqns(sub, child)
+
+
+def eqn_provenance(eqn) -> Tuple[str, int]:
+    """Best-effort ``(file_name, line)`` of the user frame that traced ``eqn``."""
+    if source_info_util is None:
+        return "<unknown>", 0
+    try:
+        frames = list(source_info_util.user_frames(eqn.source_info))
+    except Exception:
+        frames = []
+    if frames:
+        return frames[0].file_name, frames[0].start_line
+    return "<unknown>", 0
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp residual recovery
+
+
+@dataclass
+class ResidualInfo:
+    """Symbolic view of one engine-level ``custom_vjp``'s saved residuals."""
+
+    eqn: Any
+    res_avals: list  # flat residual avals, residual-tree order
+    named_leaves: list  # [(path_str, aval)] via the residual pytree
+    path: str
+    line: int
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(_aval_bytes(a) for a in self.res_avals)
+
+    def bytes_by_leaf(self) -> dict:
+        return {p: _aval_bytes(a) for p, a in self.named_leaves}
+
+
+def _aval_bytes(aval) -> int:
+    size = getattr(aval, "size", None)
+    dtype = getattr(aval, "dtype", None)
+    if size is None or dtype is None:
+        return 0
+    return int(size) * int(dtype.itemsize)
+
+
+def engine_custom_vjp_eqns(closed) -> Iterator[Any]:
+    """Yield the *outermost* ``custom_vjp_call_jaxpr`` eqns in a trace.
+
+    Does not descend into a found ``custom_vjp``'s own body: the pallas
+    kernel wrappers carry their own nested custom_vjps, and the residual
+    budget applies to the solver-engine boundary, which saves them all.
+    """
+
+    def walk(jaxpr):
+        jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "custom_vjp_call_jaxpr":
+                yield eqn
+                continue
+            for param in eqn.params.values():
+                for sub in _sub_jaxprs(param):
+                    yield from walk(sub)
+
+    yield from walk(closed)
+
+
+def residual_info(eqn) -> ResidualInfo:
+    """Recover the residual avals and named leaf paths of one custom_vjp eqn.
+
+    Forces ``fwd_jaxpr_thunk`` with all-symbolic-zero tangent flags (pure
+    tracing, nothing executes).  The forward jaxpr's outputs are ordered
+    ``(*residuals, *primal_outputs)`` where the primal count comes from
+    ``fun_jaxpr``; ``out_trees()`` yields ``(primal_tree, residual_tree)``.
+    """
+    fun_jaxpr = eqn.params["fun_jaxpr"]
+    thunk = eqn.params["fwd_jaxpr_thunk"]
+    fwd, _consts = thunk(*[False] * len(fun_jaxpr.jaxpr.invars))
+    fwd = getattr(fwd, "jaxpr", fwd)
+    out_avals = [v.aval for v in fwd.outvars]
+    n_primal = len(fun_jaxpr.jaxpr.outvars)
+    res_avals = out_avals[: len(out_avals) - n_primal]
+
+    named = []
+    try:
+        _primal_tree, res_tree = eqn.params["out_trees"]()
+        res_pytree = jtu.tree_unflatten(res_tree, res_avals)
+        for path, leaf in jtu.tree_flatten_with_path(res_pytree)[0]:
+            named.append((jtu.keystr(path), leaf))
+    except Exception:
+        named = [(f"[{i}]", a) for i, a in enumerate(res_avals)]
+
+    path, line = eqn_provenance(eqn)
+    return ResidualInfo(
+        eqn=eqn, res_avals=res_avals, named_leaves=named, path=path, line=line
+    )
+
+
+def trace(fn, *example_args):
+    """``jax.make_jaxpr`` wrapper: trace without executing or compiling."""
+    return jax.make_jaxpr(fn)(*example_args)

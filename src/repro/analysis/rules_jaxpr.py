@@ -1,0 +1,268 @@
+"""Jaxpr-level rule passes over traced solver entry points.
+
+Four passes, each the static twin of an invariant PRs 1-7 established at
+runtime:
+
+* ``residual-budget`` — walk every engine ``custom_vjp``'s residuals and
+  gate their symbolic byte count: ACA at O((K + N/K)·dim), MALI at
+  O(1)-state, adjoint at O(dim·n_eval).  The static twin of
+  ``bench_memory``/``bench_mali_memory``, applied to *every* config.
+* ``collective-in-loop`` — no ``psum``/``all_gather``/... primitive may
+  appear inside a ``while``/``scan`` body (the PR 7 roofline assumption:
+  the only collective is the one args-cotangent psum *outside* the
+  solve loop, inserted by shard_map's transpose).
+* ``dtype-contract`` — no weak-typed floating loop carries and no
+  implicit f32↔f64 promotion inside loop bodies (the PR 4 bug class:
+  weak-type time arithmetic silently truncating eval times).
+* ``host-sync`` — no ``debug_callback``/``io_callback``/``pure_callback``
+  in a loop body; outside loops, only the documented
+  ``on_failure="warn"`` site in ``core/api.py`` may call back to host.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from .findings import Finding
+from .jaxpr_walk import (
+    engine_custom_vjp_eqns,
+    eqn_provenance,
+    iter_eqns,
+    residual_info,
+)
+
+COLLECTIVE_PRIMS = frozenset(
+    {
+        "psum",
+        "all_gather",
+        "psum_scatter",
+        "reduce_scatter",
+        "all_to_all",
+        "ppermute",
+        "pmax",
+        "pmin",
+        "pmean",
+    }
+)
+
+CALLBACK_PRIMS = frozenset({"debug_callback", "io_callback", "pure_callback"})
+
+#: the one file whose module-level code may emit host callbacks outside
+#: loops: ``_apply_on_failure``'s documented ``jax.debug.print`` warn site
+HOST_SYNC_ALLOWED_FILES = ("core/api.py",)
+
+
+def check_collectives(closed, config_name: str) -> List[Finding]:
+    """No collective primitive inside a ``while``/``scan`` body."""
+    out = []
+    for eqn, depth in iter_eqns(closed):
+        if eqn.primitive.name in COLLECTIVE_PRIMS and depth > 0:
+            path, line = eqn_provenance(eqn)
+            out.append(
+                Finding(
+                    rule="collective-in-loop",
+                    path=path,
+                    line=line,
+                    message=(
+                        f"[{config_name}] collective '{eqn.primitive.name}' at "
+                        f"loop depth {depth}: per-iteration collectives break "
+                        "the shard-local-sweep roofline"
+                    ),
+                    snippet=f"{config_name}:{eqn.primitive.name}",
+                )
+            )
+    return out
+
+
+def check_host_sync(closed, config_name: str) -> List[Finding]:
+    """No host callbacks in loop bodies; elsewhere only the documented site."""
+    out = []
+    for eqn, depth in iter_eqns(closed):
+        if eqn.primitive.name not in CALLBACK_PRIMS:
+            continue
+        path, line = eqn_provenance(eqn)
+        if depth > 0:
+            out.append(
+                Finding(
+                    rule="host-sync",
+                    path=path,
+                    line=line,
+                    message=(
+                        f"[{config_name}] host callback "
+                        f"'{eqn.primitive.name}' at loop depth {depth}: "
+                        "host round-trips serialize the hot loop"
+                    ),
+                    snippet=f"{config_name}:{eqn.primitive.name}",
+                )
+            )
+        elif not any(path.endswith(allowed) for allowed in HOST_SYNC_ALLOWED_FILES):
+            out.append(
+                Finding(
+                    rule="host-sync",
+                    path=path,
+                    line=line,
+                    message=(
+                        f"[{config_name}] host callback "
+                        f"'{eqn.primitive.name}' outside the documented "
+                        'on_failure="warn" site in core/api.py'
+                    ),
+                    snippet=f"{config_name}:{eqn.primitive.name}",
+                )
+            )
+    return out
+
+
+def _loop_carry_invars(eqn):
+    """The carried invars of a ``while``/``scan`` eqn's body jaxpr."""
+    name = eqn.primitive.name
+    if name == "while":
+        body = eqn.params["body_jaxpr"].jaxpr
+        ncons = eqn.params["body_nconsts"]
+        return body.invars[ncons:]
+    if name == "scan":
+        body = eqn.params["jaxpr"].jaxpr
+        ncons = eqn.params["num_consts"]
+        ncarry = eqn.params["num_carry"]
+        return body.invars[ncons : ncons + ncarry]
+    return []
+
+
+def check_dtype_contract(closed, config_name: str) -> List[Finding]:
+    """No weak-typed floating loop carries; no f32↔f64 casts inside loops."""
+    import jax.numpy as jnp
+
+    out = []
+    for eqn, depth in iter_eqns(closed):
+        name = eqn.primitive.name
+        if name in ("while", "scan"):
+            for i, var in enumerate(_loop_carry_invars(eqn)):
+                aval = var.aval
+                dtype = getattr(aval, "dtype", None)
+                if (
+                    dtype is not None
+                    and jnp.issubdtype(dtype, jnp.floating)
+                    and getattr(aval, "weak_type", False)
+                ):
+                    path, line = eqn_provenance(eqn)
+                    out.append(
+                        Finding(
+                            rule="dtype-contract",
+                            path=path,
+                            line=line,
+                            message=(
+                                f"[{config_name}] weak-typed floating carry "
+                                f"#{i} ({dtype}) in '{name}' body: weak types "
+                                "let x64 promotion change time arithmetic "
+                                "silently"
+                            ),
+                            snippet=f"{config_name}:weak-carry:{name}",
+                        )
+                    )
+        elif name == "convert_element_type" and depth > 0:
+            src = getattr(eqn.invars[0].aval, "dtype", None)
+            dst = eqn.params.get("new_dtype")
+            if (
+                src is not None
+                and dst is not None
+                and jnp.issubdtype(src, jnp.floating)
+                and jnp.issubdtype(dst, jnp.floating)
+                and jnp.dtype(src).itemsize != jnp.dtype(dst).itemsize
+            ):
+                path, line = eqn_provenance(eqn)
+                out.append(
+                    Finding(
+                        rule="dtype-contract",
+                        path=path,
+                        line=line,
+                        message=(
+                            f"[{config_name}] implicit {jnp.dtype(src).name}->"
+                            f"{jnp.dtype(dst).name} cast at loop depth "
+                            f"{depth}: mixed-precision time arithmetic"
+                        ),
+                        snippet=f"{config_name}:cast:{jnp.dtype(src).name}->"
+                        f"{jnp.dtype(dst).name}",
+                    )
+                )
+    return out
+
+
+def check_residual_budget(closed, config) -> List[Finding]:
+    """Gate each engine ``custom_vjp``'s symbolic residual bytes.
+
+    ``config`` is a :class:`repro.analysis.entry_points.SolveConfig`;
+    its ``residual_budget_bytes`` encodes the per-method memory claim.
+    Returns one finding per over-budget engine, with a per-leaf byte
+    breakdown so the offending buffer is named.
+    """
+    budget = config.residual_budget_bytes()
+    if budget is None:  # naive: no engine custom_vjp to audit
+        return []
+    out = []
+    eqns = list(engine_custom_vjp_eqns(closed))
+    if not eqns:
+        out.append(
+            Finding(
+                rule="residual-budget",
+                path=config.name,
+                line=0,
+                message=(
+                    f"[{config.name}] no engine custom_vjp found in forward "
+                    "trace: the residual auditor has lost sight of the "
+                    f"'{config.grad_method}' engine boundary"
+                ),
+                snippet=f"{config.name}:missing-custom-vjp",
+            )
+        )
+        return out
+    for eqn in eqns:
+        info = residual_info(eqn)
+        total = info.total_bytes
+        if total > budget:
+            top = sorted(
+                info.bytes_by_leaf().items(), key=lambda kv: -kv[1]
+            )[:4]
+            detail = ", ".join(f"{k}={v}B" for k, v in top)
+            out.append(
+                Finding(
+                    rule="residual-budget",
+                    path=info.path,
+                    line=info.line,
+                    message=(
+                        f"[{config.name}] residual bytes {total} exceed the "
+                        f"{config.grad_method} budget {budget} "
+                        f"(slots={config.state_slots()}, dim={config.dim}); "
+                        f"largest leaves: {detail}"
+                    ),
+                    snippet=f"{config.name}:residual-budget",
+                )
+            )
+    return out
+
+
+def static_residual_bytes(config) -> int:
+    """Total symbolic residual bytes of a config's forward trace.
+
+    Exposed for the cost cross-check against ``launch/hlo_cost``'s
+    measured ``bytes_min`` numbers.
+    """
+    closed = config.forward_trace()
+    return sum(residual_info(e).total_bytes for e in engine_custom_vjp_eqns(closed))
+
+
+def analyze_config(config) -> List[Finding]:
+    """Run all four passes over one config (two traces)."""
+    findings: List[Finding] = []
+    fwd = config.forward_trace()
+    findings += check_residual_budget(fwd, config)
+    for closed in (fwd, config.grad_trace()):
+        findings += check_collectives(closed, config.name)
+        findings += check_host_sync(closed, config.name)
+        findings += check_dtype_contract(closed, config.name)
+    return findings
+
+
+def analyze_matrix(configs: Iterable) -> List[Finding]:
+    findings: List[Finding] = []
+    for cfg in configs:
+        findings += analyze_config(cfg)
+    return findings

@@ -79,24 +79,37 @@ class Tableau:
         return a
 
     def validate(self) -> None:
-        """Consistency checks: row-sum = c, sum(b) = 1, explicitness."""
+        """Consistency checks: row-sum = c, sum(b) = 1, explicitness.
+
+        Raises ValueError on any violation — tableaus arrive from user
+        code too (``odeint(solver=Tableau(...))``), so the checks must
+        survive ``python -O`` and name what is wrong.
+        """
         a = self.a_matrix()
         s = self.stages
-        assert a.shape == (s, s)
+        if a.shape != (s, s):
+            raise ValueError(
+                f"{self.name}: a-matrix shape {a.shape} != ({s}, {s})")
         # explicit: strictly lower triangular
-        assert np.allclose(np.triu(a), 0.0), f"{self.name}: tableau not explicit"
-        assert np.allclose(a.sum(axis=1), np.asarray(self.c), atol=1e-12), (
-            f"{self.name}: row sums != c"
-        )
-        assert abs(sum(self.b) - 1.0) < 1e-12, f"{self.name}: sum(b) != 1"
+        if not np.allclose(np.triu(a), 0.0):
+            raise ValueError(f"{self.name}: tableau not explicit (nonzero "
+                             "entries on/above the diagonal)")
+        if not np.allclose(a.sum(axis=1), np.asarray(self.c), atol=1e-12):
+            raise ValueError(f"{self.name}: row sums != c")
+        if abs(sum(self.b) - 1.0) >= 1e-12:
+            raise ValueError(f"{self.name}: sum(b) != 1")
         if self.b_err is not None:
             # embedded error weights must sum to zero (b and b_hat both sum to 1)
-            assert abs(sum(self.b_err)) < 1e-12, f"{self.name}: sum(b_err) != 0"
+            if abs(sum(self.b_err)) >= 1e-12:
+                raise ValueError(f"{self.name}: sum(b_err) != 0")
         if self.b_mid is not None:
-            assert len(self.b_mid) == s, f"{self.name}: b_mid wrong length"
+            if len(self.b_mid) != s:
+                raise ValueError(
+                    f"{self.name}: b_mid has {len(self.b_mid)} weights, "
+                    f"expected {s}")
             # consistency (dz/dt = 1): z + h·Σ b_mid must land at t + h/2
-            assert abs(sum(self.b_mid) - 0.5) < 1e-12, (
-                f"{self.name}: sum(b_mid) != 1/2")
+            if abs(sum(self.b_mid) - 0.5) >= 1e-12:
+                raise ValueError(f"{self.name}: sum(b_mid) != 1/2")
 
 
 # ----------------------------------------------------------------------------

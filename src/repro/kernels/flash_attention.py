@@ -108,7 +108,10 @@ def flash_attention_pallas(
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
     block_q = min(block_q, s)
     block_k = min(block_k, s)
-    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(
+            f"flash_attention: sequence length {s} must divide by "
+            f"block_q={block_q} and block_k={block_k}")
     nq, nk = s // block_q, s // block_k
 
     grid = (b, h, nq, nk)

@@ -59,9 +59,13 @@ def rg_lru_pallas(
 ) -> jnp.ndarray:
     """Returns h (B, S, C) fp32 solving h_t = exp(log_a_t) h_{t-1} + b_t."""
     bsz, s, c = log_a.shape
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(
+            f"rg_lru: sequence length {s} not divisible by chunk {chunk}")
     c_tile = min(c_tile, c)
-    assert c % c_tile == 0, (c, c_tile)
+    if c % c_tile != 0:
+        raise ValueError(
+            f"rg_lru: channel count {c} not divisible by c_tile {c_tile}")
     nc = s // chunk
 
     grid = (bsz, c // c_tile, nc)

@@ -96,7 +96,9 @@ def ssd_scan_pallas(
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     rep = h // g
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(
+            f"ssd_scan: sequence length {s} not divisible by chunk {chunk}")
     nc = s // chunk
 
     # layout: (B, H, nc, Q, ·) tiles

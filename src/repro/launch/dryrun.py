@@ -230,7 +230,8 @@ def main():
             for shape in SHAPES:
                 cells.append((arch, shape))
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise ValueError("dryrun: pass --arch and --shape, or --all")
         cells.append((args.arch, args.shape))
 
     n_fail = 0

@@ -95,7 +95,10 @@ def chunked_attention(q, k, v, *, window: int = 0, block: int = 1024,
     ``full_attention`` (same-seq case, offset 0)."""
     b, sq, h, dh = q.shape
     skv = k.shape[1]
-    assert skv % block == 0, (skv, block)
+    if skv % block != 0:
+        raise ValueError(
+            f"attention: kv sequence length {skv} not divisible by "
+            f"block {block}")
     nb = skv // block
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
 
@@ -287,7 +290,11 @@ def attention_apply(
 
     new_cache = None
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError(
+                "attention decode mode needs a cache (from mode='prefill') "
+                f"and a single-token input; got cache={cache is not None}, "
+                f"seq_len={s}")
         clen = cache["len"]                   # global position counter
         slots = cache["k"].shape[1]
         # ring-buffer write for windowed caches; plain append otherwise

@@ -33,8 +33,10 @@ class ParamDef:
     scale: Optional[float] = None  # stddev override for "normal"
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.logical), (
-            f"shape {self.shape} vs logical {self.logical}")
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"ParamDef: shape {self.shape} and logical axes "
+                f"{self.logical} have different ranks")
 
 
 def _is_def(x) -> bool:

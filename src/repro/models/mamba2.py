@@ -84,7 +84,9 @@ def ssd_chunked(
     """SSD chunked scan.  Returns (y (B,S,H,P), h_last (B,H,P,N))."""
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(
+            f"mamba2 ssd: sequence length {s} not divisible by chunk {chunk}")
     nc = s // chunk
     rep = h // g
 
@@ -179,7 +181,11 @@ def mamba2_block_apply(
 
     new_cache = None
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError(
+                "mamba2 decode mode needs a cache (from mode='prefill') "
+                f"and a single-token input; got cache={cache is not None}, "
+                f"seq_len={s}")
         w = p["conv_x"].shape[0]
         cs = cache["conv"]                   # (B, W-1, di + 2gn)
         di = u.shape[-1]

@@ -162,7 +162,10 @@ def moe_apply(
         n_model = mesh.shape["model"]
         n_data_total = math.prod(
             mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names)
-        assert cfg.n_experts % n_model == 0, (cfg.n_experts, n_model)
+        if cfg.n_experts % n_model != 0:
+            raise ValueError(
+                f"moe: n_experts={cfg.n_experts} not divisible by the "
+                f"mesh's model dim {n_model}")
         e_l = cfg.n_experts // n_model
         batch_axes = tuple(a for a in ("pod", "data")
                            if a in mesh.axis_names)

@@ -151,7 +151,11 @@ def rglru_block_apply(
 
     new_cache = None
     if mode == "decode":
-        assert cache is not None and s == 1
+        if cache is None or s != 1:
+            raise ValueError(
+                "rglru decode mode needs a cache (from mode='prefill') "
+                f"and a single-token input; got cache={cache is not None}, "
+                f"seq_len={s}")
         h_prev = cache["h"]                               # (B, Dr)
         log_a = -_C * jax.nn.softplus(p["lam"])[None] * r[:, 0]
         a = jnp.exp(log_a)

@@ -60,7 +60,9 @@ class TrainLoopConfig:
 def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
     def split(x):
         b = x.shape[0]
-        assert b % m == 0, (b, m)
+        if b % m != 0:
+            raise ValueError(
+                f"batch size {b} not divisible by {m} microbatches")
         return x.reshape((m, b // m) + x.shape[1:])
     return jax.tree.map(split, batch)
 

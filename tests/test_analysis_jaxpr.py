@@ -1,0 +1,203 @@
+"""Jaxpr analyzer layer: each rule pass catches an injected violation with
+provenance pointing at this file, and a representative slice of the real
+entry-point matrix is clean."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import SolveConfig, analyze_config, get_config
+from repro.analysis.rules_jaxpr import (
+    check_collectives,
+    check_dtype_contract,
+    check_host_sync,
+    check_residual_budget,
+)
+from repro.analysis.jaxpr_walk import engine_custom_vjp_eqns, residual_info
+
+THIS_FILE = pathlib.Path(__file__).name
+
+
+def _assert_provenance(finding):
+    assert finding.path.endswith(THIS_FILE), finding
+    assert finding.line > 0, finding
+
+
+# ---------------------------------------------------------------------------
+# collective placement
+
+
+def test_collective_inside_loop_caught():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import shard_mesh
+    from repro.distributed.sharding import shard_map_compat
+
+    mesh = shard_mesh()
+
+    def inner(x):
+        def body(c, _):
+            return c + jax.lax.psum(c, "data"), None
+
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    fn = shard_map_compat(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    closed = jax.make_jaxpr(fn)(jnp.zeros((mesh.size,), jnp.float32))
+    findings = check_collectives(closed, "inj")
+    assert findings, "psum inside scan body must be caught"
+    assert all(f.rule == "collective-in-loop" for f in findings)
+    _assert_provenance(findings[0])
+
+
+def test_collective_outside_loop_allowed():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import shard_mesh
+    from repro.distributed.sharding import shard_map_compat
+
+    mesh = shard_mesh()
+
+    def inner(x):
+        return jax.lax.psum(x, "data")
+
+    fn = shard_map_compat(inner, mesh=mesh, in_specs=P("data"), out_specs=P())
+    closed = jax.make_jaxpr(fn)(jnp.zeros((mesh.size,), jnp.float32))
+    assert check_collectives(closed, "inj") == []
+
+
+# ---------------------------------------------------------------------------
+# host sync
+
+
+def test_debug_print_in_loop_caught():
+    def fn(x):
+        def body(c):
+            jax.debug.print("c={c}", c=c)
+            return c + 1
+
+        return jax.lax.while_loop(lambda c: c < 3, body, x)
+
+    closed = jax.make_jaxpr(fn)(jnp.int32(0))
+    findings = check_host_sync(closed, "inj")
+    assert findings and findings[0].rule == "host-sync"
+    assert "loop depth" in findings[0].message
+    _assert_provenance(findings[0])
+
+
+def test_debug_print_outside_loop_outside_api_caught():
+    def fn(x):
+        jax.debug.print("x={x}", x=x)
+        return x + 1
+
+    closed = jax.make_jaxpr(fn)(jnp.float32(0))
+    findings = check_host_sync(closed, "inj")
+    assert findings and "documented" in findings[0].message
+    _assert_provenance(findings[0])
+
+
+def test_documented_warn_site_is_allowed():
+    # the real on_failure="warn" config: its jax.debug.print lives in
+    # core/api.py outside any loop body, which the pass permits
+    assert analyze_config(get_config("aca-full-warn")) == []
+
+
+# ---------------------------------------------------------------------------
+# dtype contract
+
+
+def test_weak_typed_loop_carry_caught():
+    def fn(x):
+        return jax.lax.while_loop(lambda c: c < 3.0, lambda c: c + 1.0, x)
+
+    closed = jax.make_jaxpr(fn)(1.0)  # python float -> weak f32 carry
+    findings = check_dtype_contract(closed, "inj")
+    assert findings and "weak-typed floating carry" in findings[0].message
+    _assert_provenance(findings[0])
+
+
+def test_float_width_cast_in_loop_caught():
+    def fn(x):
+        def body(c, _):
+            y = c.astype(jnp.float16).astype(jnp.float32)
+            return y, None
+
+        out, _ = jax.lax.scan(body, x, None, length=2)
+        return out
+
+    closed = jax.make_jaxpr(fn)(jnp.zeros((4,), jnp.float32))
+    findings = check_dtype_contract(closed, "inj")
+    assert findings, "f32<->f16 cast inside a scan body must be caught"
+    assert any("cast" in f.message for f in findings)
+    _assert_provenance(findings[0])
+
+
+def test_strong_typed_carries_pass():
+    def fn(x):
+        return jax.lax.while_loop(
+            lambda c: c < 3.0, lambda c: c + 1.0, x)
+
+    closed = jax.make_jaxpr(fn)(jnp.float32(1.0))  # strong f32
+    assert check_dtype_contract(closed, "inj") == []
+
+
+# ---------------------------------------------------------------------------
+# residual budget
+
+
+def _make_fat_custom_vjp(n_steps, dim):
+    @jax.custom_vjp
+    def f(z):
+        return z
+
+    def fwd(z):
+        # an O(n_steps * dim) residual — the bug class the gate exists for
+        return z, jnp.zeros((n_steps, dim), jnp.float32) + z[None, :]
+
+    def bwd(res, g):
+        return (g + res[0],)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def test_oversized_residual_caught():
+    cfg = SolveConfig("inj-mali", "mali", dim=96, max_steps=64)
+    f = _make_fat_custom_vjp(cfg.max_steps, cfg.dim)
+    closed = jax.make_jaxpr(f)(jnp.zeros((cfg.dim,), jnp.float32))
+    findings = check_residual_budget(closed, cfg)
+    assert findings and findings[0].rule == "residual-budget"
+    assert "exceed" in findings[0].message
+
+
+def test_missing_engine_custom_vjp_caught():
+    cfg = SolveConfig("inj-missing", "aca", dim=8)
+    closed = jax.make_jaxpr(lambda z: z * 2)(jnp.zeros((8,), jnp.float32))
+    findings = check_residual_budget(closed, cfg)
+    assert findings and "lost sight" in findings[0].message
+
+
+def test_residual_info_names_checkpoint_leaves():
+    cfg = get_config("aca-full-solo")
+    closed = cfg.forward_trace()
+    eqns = list(engine_custom_vjp_eqns(closed))
+    assert len(eqns) == 1
+    info = residual_info(eqns[0])
+    assert info.total_bytes > 0
+    # the checkpoint state buffer is a named leaf of the residual pytree
+    assert any(".z" in p for p, _ in info.named_leaves), info.named_leaves
+
+
+# ---------------------------------------------------------------------------
+# the real matrix (representative slice; the full matrix runs in CI)
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["aca-full-solo", "aca-seg-batched", "adjoint-solo", "naive-batched",
+     "mali-sharded", "aca-seg-pallas-solo"],
+)
+def test_registered_configs_are_clean(name):
+    assert analyze_config(get_config(name)) == []

@@ -1,0 +1,233 @@
+"""AST-lint layer: every rule catches an injected violation with correct
+file:line provenance, the baseline mechanism round-trips, and the repo at
+HEAD is clean under the checked-in baseline."""
+
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    BaselineEntry,
+    Finding,
+    Report,
+    lint_file,
+    lint_paths,
+    load_baseline,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _lint_snippet(tmp_path, rel, source):
+    """Write ``source`` at tmp_path/rel and lint it with repo-relative paths."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return lint_file(str(path), root=str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# rule injections
+
+
+def test_bare_assert_caught_with_provenance(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "pkg/mod.py",
+        """\
+        def f(x):
+            y = x + 1
+            assert y > 0, "bad"
+            return y
+        """,
+    )
+    byrule = [f for f in findings if f.rule == "bare-assert"]
+    assert len(byrule) == 1
+    assert byrule[0].path == "pkg/mod.py"
+    assert byrule[0].line == 3
+    assert byrule[0].snippet == 'assert y > 0, "bad"'
+
+
+def test_shard_map_direct_import_caught(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "pkg/bad_import.py",
+        """\
+        from jax.experimental.shard_map import shard_map
+
+        def f(fn, mesh):
+            return shard_map(fn, mesh=mesh, in_specs=None, out_specs=None)
+        """,
+    )
+    hits = [f for f in findings if f.rule == "shard-map-direct"]
+    assert len(hits) == 1 and hits[0].line == 1
+
+
+def test_shard_map_direct_attribute_caught(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "pkg/bad_attr.py",
+        """\
+        import jax
+
+        def f(fn, mesh):
+            return jax.shard_map(fn, mesh=mesh, in_specs=None, out_specs=None)
+        """,
+    )
+    hits = [f for f in findings if f.rule == "shard-map-direct"]
+    assert len(hits) == 1 and hits[0].line == 4
+
+
+def test_shard_map_allowed_in_compat_module(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "distributed/sharding.py",
+        """\
+        from jax.experimental.shard_map import shard_map
+        """,
+    )
+    assert not [f for f in findings if f.rule == "shard-map-direct"]
+
+
+def test_jit_host_leak_caught(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "core/integrate.py",
+        """\
+        import numpy as np
+
+        def step(z):
+            n = int(z.sum())
+            s = z.max().item()
+            m = np.minimum(n, s)
+            return m
+        """,
+    )
+    hits = sorted(
+        (f.line, f.message.split(" ")[0]) for f in findings if f.rule == "jit-host-leak"
+    )
+    assert [ln for ln, _ in hits] == [4, 5, 6]
+
+
+def test_jit_host_leak_ignores_non_engine_files(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "data/loader.py",
+        """\
+        import numpy as np
+
+        def load():
+            return np.zeros(3)
+        """,
+    )
+    assert not [f for f in findings if f.rule == "jit-host-leak"]
+
+
+def test_jit_host_leak_allows_static_casts(tmp_path):
+    # float()/int() of a plain name is a static-parameter cast, not a leak
+    findings = _lint_snippet(
+        tmp_path,
+        "core/stepper.py",
+        """\
+        def order_scale(order):
+            return float(order)
+        """,
+    )
+    assert not [f for f in findings if f.rule == "jit-host-leak"]
+
+
+def test_registry_drift_caught(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "core/api.py",
+        """\
+        def solve(grad_method="aca", on_failure="explode"):
+            if grad_method == "bogus_method":
+                pass
+            ladder = [{"solver": "nope5", "grad_method": "aca"}]
+            solver = "alf" if grad_method == "mali" else "dopri5"
+            return ladder
+        """,
+    )
+    hits = {(f.line, f.snippet.split()[0]) for f in findings if f.rule == "registry-drift"}
+    lines = sorted(ln for ln, _ in hits)
+    assert lines == [1, 2, 4]  # bad on_failure default, bad compare, bad rung
+
+
+def test_registry_drift_accepts_live_names(tmp_path):
+    findings = _lint_snippet(
+        tmp_path,
+        "core/api.py",
+        """\
+        def solve(solver="dopri5", grad_method="mali", on_failure="warn"):
+            solver = "alf" if grad_method == "mali" else "rk4"
+            return get_tableau("bosh3")
+        """,
+    )
+    assert not [f for f in findings if f.rule == "registry-drift"]
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+
+
+def test_baseline_requires_justification(tmp_path):
+    bad = tmp_path / "baseline.json"
+    bad.write_text(json.dumps(
+        [{"rule": "bare-assert", "path": "x.py", "match": "assert",
+          "justification": "  "}]))
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(str(bad))
+
+
+def test_baseline_requires_all_keys(tmp_path):
+    bad = tmp_path / "baseline.json"
+    bad.write_text(json.dumps([{"rule": "bare-assert"}]))
+    with pytest.raises(ValueError, match="missing keys"):
+        load_baseline(str(bad))
+
+
+def test_baseline_covers_by_rule_path_and_snippet():
+    entry = BaselineEntry(
+        rule="bare-assert", path="kernels/rk_stage.py",
+        match="assert z.shape == (n,)", justification="internal invariant")
+    f = Finding(rule="bare-assert", path="src/repro/kernels/rk_stage.py",
+                line=145, message="m", snippet="assert z.shape == (n,)")
+    assert entry.covers(f)
+    # different rule, different file, or different snippet -> not covered
+    assert not entry.covers(Finding(rule="jit-host-leak", path=f.path,
+                                    line=1, message="m", snippet=f.snippet))
+    assert not entry.covers(Finding(rule="bare-assert", path="src/other.py",
+                                    line=1, message="m", snippet=f.snippet))
+    assert not entry.covers(Finding(rule="bare-assert", path=f.path,
+                                    line=1, message="m", snippet="assert q"))
+
+
+def test_report_active_suppressed_and_stale():
+    entries = [
+        BaselineEntry(rule="r", path="a.py", match="x", justification="j"),
+        BaselineEntry(rule="r", path="gone.py", match="y", justification="j"),
+    ]
+    rep = Report(baseline=entries)
+    rep.add(Finding(rule="r", path="a.py", line=1, message="m", snippet="x"))
+    rep.add(Finding(rule="r", path="b.py", line=2, message="m", snippet="z"))
+    assert [f.path for f in rep.active()] == ["b.py"]
+    assert [f.path for f in rep.suppressed()] == ["a.py"]
+    assert [e.path for e in rep.stale_baseline()] == ["gone.py"]
+    assert not rep.ok
+    assert "1 finding(s), 1 suppressed" in rep.render()
+
+
+# ---------------------------------------------------------------------------
+# the repo at HEAD is clean under the checked-in baseline
+
+
+def test_repo_is_clean_under_baseline():
+    baseline = load_baseline(str(REPO / "tools" / "solver_lint_baseline.json"))
+    report = Report(baseline=baseline)
+    report.extend(lint_paths([str(REPO / "src")], root=str(REPO)))
+    assert report.active() == [], report.render()
+    # and the baseline carries no dead entries
+    assert report.stale_baseline() == []

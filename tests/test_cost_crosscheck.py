@@ -1,0 +1,69 @@
+"""The analyzer's static residual-bytes model and ``launch/hlo_cost``'s
+measured ``bytes_min`` must agree *directionally* on the benched configs:
+segmentation shrinks ACA residual memory, and MALI sits below full-buffer
+ACA regardless of step count.  (Absolute numbers differ by design — the
+static model counts only custom_vjp residuals, the HLO model counts whole
+live buffers — but if the orderings ever disagree, one of the two cost
+models has rotted.)"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import SolveConfig, static_residual_bytes
+from repro.core.api import odeint
+from repro.launch.hlo_cost import analyze_hlo
+
+DIM, N_STEPS, K = 32, 64, 8
+
+CONFIGS = {
+    "aca-full": SolveConfig("x-aca-full", "aca", dim=DIM, max_steps=N_STEPS),
+    "aca-seg": SolveConfig("x-aca-seg", "aca", dim=DIM, max_steps=N_STEPS,
+                           segmented=True, segments=K),
+    "mali": SolveConfig("x-mali", "mali", dim=DIM, max_steps=N_STEPS),
+}
+
+
+def _measured_bytes(cfg: SolveConfig) -> int:
+    """The benches' metric: residual-driven min live bytes of the lowered
+    value_and_grad, measured on the compiled HLO."""
+    kw = cfg.odeint_kwargs()
+
+    def loss(z0, w):
+        ys, _ = odeint(lambda t, z, w: -(w * z), z0,
+                       jnp.linspace(0.0, 1.0, cfg.n_eval), (w,), **kw)
+        return jnp.sum(ys)
+
+    z0 = jnp.ones((cfg.dim,), jnp.float32)
+    w = jnp.ones((cfg.dim,), jnp.float32)
+    g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1))).lower(z0, w).compile()
+    return int(analyze_hlo(g.as_text()).bytes_min)
+
+
+@pytest.fixture(scope="module")
+def costs():
+    static = {k: static_residual_bytes(c) for k, c in CONFIGS.items()}
+    measured = {k: _measured_bytes(c) for k, c in CONFIGS.items()}
+    return static, measured
+
+
+def test_static_model_orders_the_methods(costs):
+    static, _ = costs
+    assert static["aca-full"] > static["aca-seg"] > static["mali"] > 0, static
+
+
+def test_measured_model_orders_the_methods(costs):
+    _, measured = costs
+    assert measured["aca-full"] > measured["aca-seg"], measured
+    assert measured["aca-full"] > measured["mali"], measured
+
+
+def test_static_and_measured_agree_directionally(costs):
+    static, measured = costs
+    pairs = [("aca-full", "aca-seg"), ("aca-full", "mali")]
+    for hi, lo in pairs:
+        s_dir = static[hi] - static[lo]
+        m_dir = measured[hi] - measured[lo]
+        assert s_dir > 0 and m_dir > 0, (
+            f"cost models diverged on {hi} vs {lo}: "
+            f"static delta {s_dir}, measured delta {m_dir}")

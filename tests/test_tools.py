@@ -1,0 +1,176 @@
+"""Meta-tooling coverage: pass/fail fixture cases for check_bench_schema,
+check_docs, and the solver_lint CLI (the ISSUE-8 gap: the CI gates
+themselves had zero tests)."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools import check_bench_schema, check_docs  # noqa: E402
+
+
+def _cli(args, **env_extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("REPRO_PALLAS_INTERPRET", "1")
+    return subprocess.run(
+        [sys.executable] + args, cwd=REPO, env={**env, **env_extra},
+        capture_output=True, text=True)
+
+
+# ---------------------------------------------------------------------------
+# check_bench_schema
+
+
+GOOD_LINE = json.dumps({"bench": "solve", "metrics": {"ms": 1.5, "n": 3}})
+
+
+def test_bench_schema_accepts_valid_artifacts(tmp_path):
+    (tmp_path / "BENCH_solve.json").write_text(GOOD_LINE + "\n")
+    assert check_bench_schema.main(["prog", str(tmp_path)]) == 0
+
+
+def test_bench_schema_rejects_bad_lines(tmp_path, capsys):
+    bad = "\n".join([
+        GOOD_LINE,
+        json.dumps({"bench": "", "metrics": {"ms": 1.0}}),
+        json.dumps({"bench": "x", "metrics": {}}),
+        json.dumps({"bench": "x", "metrics": {"ms": float("inf")}}),
+        "not json at all",
+    ])
+    (tmp_path / "BENCH_bad.json").write_text(bad + "\n")
+    assert check_bench_schema.main(["prog", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "non-empty string" in out
+    assert "not valid JSON" in out
+
+
+def test_bench_schema_rejects_empty_artifact_dir(tmp_path):
+    assert check_bench_schema.main(["prog", str(tmp_path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# check_docs
+
+
+def _docs_fixture(tmp_path, readme, doc=""):
+    (tmp_path / "README.md").write_text(textwrap.dedent(readme))
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "page.md").write_text(textwrap.dedent(doc))
+    return tmp_path
+
+
+def test_check_docs_passes_on_good_fixture(tmp_path, monkeypatch):
+    _docs_fixture(
+        tmp_path,
+        """\
+        # readme
+        [page](docs/page.md) and `repro.core.odeint` live here.
+
+        ```python
+        x = 1 + 1
+        ```
+        """,
+    )
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    assert check_docs.check_links() == []
+    assert check_docs.check_snippets() == []
+    assert check_docs.check_symbol_refs() == []
+
+
+def test_check_docs_catches_broken_link(tmp_path, monkeypatch):
+    _docs_fixture(tmp_path, "[gone](docs/missing.md)\n")
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    errors = check_docs.check_links()
+    assert errors and "broken link" in errors[0]
+
+
+def test_check_docs_catches_bad_snippet(tmp_path, monkeypatch):
+    _docs_fixture(tmp_path, "```python\ndef f(:\n```\n")
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    errors = check_docs.check_snippets()
+    assert errors and "does not parse" in errors[0]
+
+
+def test_check_docs_catches_dead_symbol_ref(tmp_path, monkeypatch):
+    _docs_fixture(
+        tmp_path,
+        "see `repro.core.odeint` (fine) and `repro.core.not_a_symbol` (dead)\n",
+    )
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    errors = check_docs.check_symbol_refs()
+    assert len(errors) == 1
+    assert "repro.core.not_a_symbol" in errors[0]
+    assert "README.md:1" in errors[0]
+
+
+def test_check_docs_skips_refs_inside_fences(tmp_path, monkeypatch):
+    _docs_fixture(
+        tmp_path,
+        "```python\n# `repro.core.not_a_symbol` in code is snippet-gated\n```\n",
+    )
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    assert check_docs.check_symbol_refs() == []
+
+
+def test_check_docs_cli_passes_on_repo():
+    res = _cli([str(REPO / "tools" / "check_docs.py")])
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+# ---------------------------------------------------------------------------
+# solver_lint CLI
+
+
+def test_solver_lint_cli_fails_on_violation_and_baseline_suppresses(tmp_path):
+    target = tmp_path / "core" / "api.py"
+    target.parent.mkdir(parents=True)
+    target.write_text('def f(grad_method="definitely_not_real"):\n    pass\n')
+
+    res = _cli(["-m", "tools.solver_lint", str(target), "--baseline", "",
+                "--root", str(tmp_path)])
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "registry-drift" in res.stdout
+    assert "core/api.py:1" in res.stdout
+
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps([{
+        "rule": "registry-drift", "path": "core/api.py",
+        "match": "definitely_not_real",
+        "justification": "test fixture"}]))
+    res = _cli(["-m", "tools.solver_lint", str(target),
+                "--baseline", str(baseline), "--root", str(tmp_path)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "1 suppressed" in res.stdout
+
+
+def test_solver_lint_cli_clean_on_repo_src():
+    res = _cli(["-m", "tools.solver_lint", "src/"])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "0 finding(s)" in res.stdout
+
+
+def test_jaxpr_analyzer_cli_single_config(tmp_path):
+    report = tmp_path / "report.txt"
+    res = _cli(["-m", "repro.analysis", "--configs", "naive-solo",
+                "--report", str(report)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert report.exists() and "0 finding(s)" in report.read_text()
+
+
+def test_jaxpr_analyzer_cli_lists_full_matrix():
+    res = _cli(["-m", "repro.analysis", "--list"])
+    assert res.returncode == 0
+    names = res.stdout.split()
+    assert len(names) == 31
+    for probe in ("aca-seg-pallas-sharded", "mali-batched", "aca-full-warn"):
+        assert probe in names

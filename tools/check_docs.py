@@ -1,6 +1,6 @@
 """Docs health check, run by the CI docs job.
 
-Three gates over ``README.md`` + ``docs/**/*.md``:
+Four gates over ``README.md`` + ``docs/**/*.md``:
 
 1. every relative link resolves to an existing file (anchors are
    stripped; absolute http(s)/mailto links are skipped);
@@ -9,7 +9,10 @@ Three gates over ``README.md`` + ``docs/**/*.md``:
    errors as the API evolves;
 3. every public symbol exported by ``repro.core`` (its ``__all__``) has a
    real docstring — the auto-generated ``Name(field, ...)`` signature
-   docstring of dataclasses/NamedTuples does not count.
+   docstring of dataclasses/NamedTuples does not count;
+4. every backticked ``repro.*`` dotted reference resolves against the
+   live package (import the module prefix, getattr the rest), so prose
+   cannot keep naming symbols a refactor renamed away.
 
 Exits non-zero with one line per violation.
 
@@ -99,13 +102,65 @@ def check_docstrings() -> list:
     return errors
 
 
+# backticked dotted repro references: `repro.core.api.odeint`,
+# `repro.distributed.shard_mesh()`; a trailing call suffix is stripped
+_REPRO_REF = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)(?:\(\))?`")
+_FENCE_LINE = re.compile(r"^\s*```")
+
+
+def _resolve_repro_ref(dotted: str) -> bool:
+    """True iff ``dotted`` names an importable module/attribute chain."""
+    import importlib
+
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbol_refs() -> list:
+    """Resolve every backticked ``repro.*`` reference against the package."""
+    errors = []
+    checked = {}
+    for md in _md_files():
+        if not md.exists():
+            continue
+        in_fence = False
+        for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+            if _FENCE_LINE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue  # snippet gate owns fenced code
+            for m in _REPRO_REF.finditer(line):
+                dotted = m.group(1)
+                if dotted not in checked:
+                    checked[dotted] = _resolve_repro_ref(dotted)
+                if not checked[dotted]:
+                    errors.append(
+                        f"{md.relative_to(ROOT)}:{lineno}: `{dotted}` does "
+                        "not resolve against the live repro package")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_snippets() + check_docstrings()
+    errors = (check_links() + check_snippets() + check_docstrings()
+              + check_symbol_refs())
     for e in errors:
         print(f"FAIL {e}")
     if errors:
         return 1
-    print("docs check OK (links + python snippets + public docstrings)")
+    print("docs check OK (links + python snippets + public docstrings "
+          "+ repro.* symbol refs)")
     return 0
 
 

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""AST repo lint CLI: ``python -m tools.solver_lint src/``.
+
+Runs the solver-stack AST rules (shard-map-direct, bare-assert,
+jit-host-leak, registry-drift) over the given files/directories and
+exits nonzero on any finding not covered by the baseline file.  See
+``docs/static-analysis.md`` for the rule catalog and suppression
+workflow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(_REPO_ROOT, "tools", "solver_lint_baseline.json")
+
+try:
+    import repro.analysis  # noqa: F401
+except ImportError:  # running from a checkout without PYTHONPATH=src
+    sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+from repro.analysis import Report, lint_paths, load_baseline
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.solver_lint",
+        description="solver-stack AST lint over repo sources",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"], help="files or directories (default: src)"
+    )
+    parser.add_argument(
+        "--baseline",
+        default=DEFAULT_BASELINE,
+        help="baseline/suppression JSON ('' disables)",
+    )
+    parser.add_argument(
+        "--root", default=".", help="root for repo-relative finding paths"
+    )
+    parser.add_argument(
+        "--report", default=None, help="also write the findings report to this file"
+    )
+    parser.add_argument(
+        "-v", "--verbose", action="store_true", help="show suppressed findings too"
+    )
+    parser.add_argument(
+        "--stale-baseline-check",
+        action="store_true",
+        help="also fail if baseline entries no longer match anything",
+    )
+    args = parser.parse_args(argv)
+
+    baseline = ()
+    if args.baseline and os.path.exists(args.baseline):
+        baseline = load_baseline(args.baseline)
+
+    paths = args.paths or ["src"]
+    report = Report(baseline=baseline)
+    report.extend(lint_paths(paths, root=args.root))
+
+    text = report.render(verbose=args.verbose)
+    print(text)
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+
+    ok = report.ok
+    if args.stale_baseline_check:
+        stale = report.stale_baseline()
+        for entry in stale:
+            print(f"stale baseline entry: {entry.rule} {entry.path} {entry.match!r}")
+        ok = ok and not stale
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
