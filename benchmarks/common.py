@@ -50,6 +50,48 @@ def emit_json(bench: str, metrics: Mapping) -> None:
             fh.write(line + "\n")
 
 
+def percentile(xs, q: float) -> float:
+    """Percentile by linear interpolation over the sorted sample.
+
+    ``q`` in [0, 100].  Deterministic pure-Python (no numpy dtype
+    surprises in the artifact pipeline): ``q=50`` of an even-sized
+    sample is the mean of the middle pair; a single sample is every
+    percentile of itself.  Raises ``ValueError`` on an empty sample —
+    an empty latency list means the benchmark produced nothing, which
+    should fail loudly rather than emit a silent 0.
+    """
+    xs = sorted(float(x) for x in xs)
+    if not xs:
+        raise ValueError("percentile of an empty sample")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100]; got {q}")
+    if len(xs) == 1:
+        return xs[0]
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def latency_summary(latencies) -> dict:
+    """p50/p99/mean/max over a latency sample (serving benchmarks).
+
+    Returns plain floats keyed ``p50``/``p99``/``mean``/``max`` plus the
+    sample size ``n`` — ready for ``emit_json`` metrics.
+    """
+    xs = [float(x) for x in latencies]
+    if not xs:
+        raise ValueError("latency_summary of an empty sample")
+    return {
+        "n": len(xs),
+        "p50": percentile(xs, 50.0),
+        "p99": percentile(xs, 99.0),
+        "mean": sum(xs) / len(xs),
+        "max": max(xs),
+    }
+
+
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
     """Median wall-time (seconds) of fn(*args) with block_until_ready."""
     for _ in range(warmup):

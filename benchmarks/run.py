@@ -16,8 +16,9 @@ from . import (bench_batched_solve, bench_classification,
                bench_dense_eval, bench_failure_overhead,
                bench_mali_memory, bench_memory, bench_method_costs,
                bench_node_lm, bench_reliability, bench_reverse_error,
-               bench_sharded_solve, bench_solver_robustness,
-               bench_threebody, bench_timeseries, bench_toy_gradient)
+               bench_serve_node, bench_sharded_solve,
+               bench_solver_robustness, bench_threebody,
+               bench_timeseries, bench_toy_gradient)
 from .common import emit
 
 BENCHES = [
@@ -38,6 +39,8 @@ BENCHES = [
      bench_failure_overhead.run),
     ("sharded_solve (beyond-paper: mesh scaling)",
      bench_sharded_solve.run),
+    ("serve_node (beyond-paper: continuous batching)",
+     bench_serve_node.run),
 ]
 
 

@@ -3,7 +3,9 @@
 The analyzer proves invariants by *tracing* (never executing) every
 public solve configuration: 4 gradient methods × {solo, batched} ×
 {pytree, pallas-interpret} × {full, segmented checkpoints} × {plain,
-mesh-sharded}, plus the documented ``on_failure="warn"`` site.  Each
+mesh-sharded}, plus the documented ``on_failure="warn"`` site, the
+per-row tolerance (QoS) variants, and the serving engine's canonical
+chunk solve (``repro.serve.node_engine``).  Each
 :class:`SolveConfig` knows how to build its undifferentiated forward
 trace (where the engine ``custom_vjp`` is visible, residuals and all)
 and its gradient trace (where the backward sweeps' loops and the
@@ -39,6 +41,12 @@ class SolveConfig:
     sharded: bool = False
     segmented: bool = False
     on_failure: str = "status"
+    #: per-row (batch,) rtol/atol arrays instead of scalars — the
+    #: serving QoS path through the row-tol kernel dispatch
+    row_tol: bool = False
+    #: trace the serving engine's canonical chunk solve: the augmented
+    #: [z, t_off, delta] field over s ∈ [0, 1] with explicit per-row h0
+    serving: bool = False
     dim: int = 96
     batch: int = 8
     n_eval: int = 2
@@ -60,10 +68,16 @@ class SolveConfig:
             from repro.distributed import shard_mesh
 
             kw["mesh"] = shard_mesh()
+        if self.row_tol:
+            kw["rtol"] = jnp.logspace(-3, -6, self.batch).astype(jnp.float32)
+            kw["atol"] = jnp.logspace(-5, -8, self.batch).astype(jnp.float32)
+        if self.serving:
+            kw["h0"] = jnp.full((self.batch,), 0.05, jnp.float32)
         return kw
 
     def example_args(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        z_shape = (self.batch, self.dim) if self.batched else (self.dim,)
+        d = self.dim + 2 if self.serving else self.dim
+        z_shape = (self.batch, d) if self.batched else (d,)
         z0 = jnp.zeros(z_shape, jnp.float32)
         w = jnp.zeros((self.dim,), jnp.float32)
         ts = jnp.linspace(0.0, 1.0, self.n_eval).astype(jnp.float32)
@@ -76,6 +90,11 @@ class SolveConfig:
 
         def field_fn(t, z, w):
             return -(w * z)
+
+        if self.serving:
+            from repro.serve.node_engine import augment_field
+
+            field_fn = augment_field(field_fn)
 
         def solve(z0, w, ts):
             return odeint(field_fn, z0, ts, (w,), **kw)
@@ -144,7 +163,7 @@ def _base_configs() -> list:
 
 
 def build_matrix() -> list:
-    """The full registered matrix (31 configs)."""
+    """The full registered matrix (37 configs)."""
     out = []
     for base in _base_configs():
         for pallas in (False, True):
@@ -164,6 +183,24 @@ def build_matrix() -> list:
     # the documented jax.debug.print warn site must stay analyzable (and
     # stay *outside* any loop body — the host-sync pass checks exactly this)
     out.append(SolveConfig("aca-full-warn", "aca", on_failure="warn"))
+    # per-row tolerance (QoS) entry points: the serving stack's kernel
+    # dispatch — rowtol Pallas kernel, vmapped error_ratio, per-row h0
+    out.extend([
+        SolveConfig("aca-full-rowtol-batched", "aca", batched=True,
+                    row_tol=True),
+        SolveConfig("aca-full-rowtol-pallas-batched", "aca",
+                    use_pallas=True, batched=True, row_tol=True),
+        SolveConfig("naive-rowtol-batched", "naive", batched=True,
+                    row_tol=True),
+        SolveConfig("mali-rowtol-batched", "mali", batched=True,
+                    row_tol=True),
+        # the serving engine's jitted chunk solve: canonical s ∈ [0, 1]
+        # over augmented [z, t_off, delta] rows, per-row tol + h0
+        SolveConfig("serve-chunk", "aca", batched=True, row_tol=True,
+                    serving=True),
+        SolveConfig("serve-chunk-mali", "mali", batched=True,
+                    row_tol=True, serving=True),
+    ])
     return out
 
 

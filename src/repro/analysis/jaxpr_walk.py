@@ -145,7 +145,12 @@ def residual_info(eqn) -> ResidualInfo:
     """
     fun_jaxpr = eqn.params["fun_jaxpr"]
     thunk = eqn.params["fwd_jaxpr_thunk"]
-    fwd, _consts = thunk(*[False] * len(fun_jaxpr.jaxpr.invars))
+    # closed-over tracers (e.g. per-row tolerance arrays reaching the
+    # engine custom_vjp under jit) are hoisted as leading consts of
+    # fun_jaxpr; the thunk wants one zero-flag per *explicit* arg only
+    num_consts = eqn.params.get("num_consts", 0)
+    fwd, _consts = thunk(
+        *[False] * (len(fun_jaxpr.jaxpr.invars) - num_consts))
     fwd = getattr(fwd, "jaxpr", fwd)
     out_avals = [v.aval for v in fwd.outvars]
     n_primal = len(fun_jaxpr.jaxpr.outvars)

@@ -235,6 +235,20 @@ def odeint(
     per-row error norms); fixed-grid solvers share one exact grid, so
     batching is lossless there.
 
+    Under ``batch_axis``, ``rtol``/``atol`` may additionally be (B,)
+    arrays — **per-element tolerances**: every batch row's stepsize
+    controller (initial-stepsize heuristic, per-trial error norm,
+    accept/reject) targets that row's own (rtol, atol), so tight- and
+    loose-tolerance problems share one fused solve without lockstep
+    waste — the per-request quality-of-service knob of the serving
+    engine (``repro.serve.NodeServeEngine``).  A row at tolerance τ is
+    **bitwise identical** to the same row in an all-τ batch (rows never
+    interact; the loaded per-row tolerance computes the same f32
+    arithmetic as the baked scalar), on both the pytree and the fused
+    Pallas path.  Requires an adaptive solver (or ``mali``); not yet
+    composable with ``mesh`` (the tolerance rows would replicate, not
+    shard).  Tolerances never carry gradient.  See ``docs/serving.md``.
+
     ``checkpoint_segments=K`` (adaptive ACA only) bounds the trajectory-
     checkpoint state memory: instead of every accepted state (O(N_f ·
     dim)), the forward stores K coarse snapshots plus the full *scalar*
@@ -358,6 +372,34 @@ def odeint(
             "per-sample batched solve over the mesh's data axes, so the "
             "state must carry a batch dimension — pass batch_axis=a "
             "(or drop mesh for a single-sample solve)")
+    row_tol = jnp.ndim(rtol) > 0 or jnp.ndim(atol) > 0
+    if row_tol:
+        if batch_axis is None:
+            raise ValueError(
+                "array rtol/atol are *per-element* tolerances and "
+                "require batch_axis: each entry pairs with one batch "
+                "row's stepsize controller — pass batch_axis=a, or a "
+                "scalar tolerance for a single-sample solve")
+        if mesh is not None:
+            raise ValueError(
+                "per-element rtol/atol do not compose with mesh yet: "
+                "the (B,) tolerance rows are closure-captured by the "
+                "engine custom_vjp and would replicate — not shard — "
+                "across devices inside shard_map, silently mispairing "
+                "tolerances with batch rows; drop mesh or use a scalar "
+                "tolerance")
+        if not mali and not tab.adaptive:
+            raise ValueError(
+                f"per-element rtol/atol require an adaptive solver (got "
+                f"{tab.name!r}): fixed grids have no error control to "
+                "point a tolerance at — use steps_per_interval instead")
+        rtol = jnp.asarray(rtol, jnp.float32)
+        atol = jnp.asarray(atol, jnp.float32)
+        if rtol.ndim > 1 or atol.ndim > 1:
+            raise ValueError(
+                "per-element rtol/atol must be rank-1 (one tolerance "
+                f"per batch row); got shapes {jnp.shape(rtol)} / "
+                f"{jnp.shape(atol)}")
     if _ts_direction(ts) < 0:
         # reverse time: solve the time-negated problem over ascending -ts
         f, ts = _negate_time(f), -ts
@@ -465,6 +507,13 @@ def _odeint_batched(
             f"all state leaves must share one batch size at axis "
             f"{batch_axis}; got {sorted(sizes)}")
     B = sizes.pop()
+
+    for tname, tol in (("rtol", rtol), ("atol", atol)):
+        if jnp.ndim(tol) == 1 and jnp.shape(tol)[0] not in (1, B):
+            raise ValueError(
+                f"per-element {tname} must carry one entry per batch row "
+                f"(B={B}) or a single broadcastable entry; got shape "
+                f"{jnp.shape(tol)}")
 
     z0 = jax.tree.map(
         lambda l, a: jnp.moveaxis(l, a, 0) if a else l, z0, axes)

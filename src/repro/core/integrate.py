@@ -696,6 +696,16 @@ def adaptive_while_solve(
     return ys_out, ckpts, stats
 
 
+def _row_tolerances(rtol, atol, B):
+    """Normalize a per-row tolerance pair to ((B,), (B,)) f32 arrays, or
+    None when both are scalars (the classic solve-global path — kept
+    untouched so scalar solves stay bit-compatible)."""
+    if jnp.ndim(rtol) == 0 and jnp.ndim(atol) == 0:
+        return None
+    return (jnp.broadcast_to(jnp.asarray(rtol, jnp.float32), (B,)),
+            jnp.broadcast_to(jnp.asarray(atol, jnp.float32), (B,)))
+
+
 def _bwhere(pred, a, b):
     """jnp.where with a (B,) predicate broadcast over batch-leading leaves."""
     return jnp.where(pred.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
@@ -754,6 +764,13 @@ def batched_adaptive_while_solve(
     failing element freezes (leaves the live set, h = 0 identity trials)
     and reports ``SolveStatus.NONFINITE_STATE`` in its status row while
     healthy elements integrate on bit-identically.
+
+    ``rtol``/``atol`` may be scalars (one tolerance for the whole batch,
+    the classic path) or (B,) arrays — then every element's stepsize
+    controller targets its *own* tolerance (initial-stepsize heuristic
+    and per-trial error norm included), the per-request QoS knob of the
+    serving engine.  A row at tolerance τ is bitwise the all-τ batch's
+    row either way.
     """
     if not tab.adaptive:
         raise ValueError("batched_adaptive_while_solve requires an "
@@ -767,10 +784,15 @@ def batched_adaptive_while_solve(
     n_snap, seg_len = _snapshot_layout(checkpoint_segments, max_steps)
     targs = args
 
+    row_tol = _row_tolerances(rtol, atol, B)
     hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals per elt
     if h0 is None:
-        h0 = jax.vmap(lambda z: initial_stepsize(
-            f, ts[0], z, targs, tab.order, rtol, atol))(z0)
+        if row_tol is not None:
+            h0 = jax.vmap(lambda z, rt, at: initial_stepsize(
+                f, ts[0], z, targs, tab.order, rt, at))(z0, *row_tol)
+        else:
+            h0 = jax.vmap(lambda z: initial_stepsize(
+                f, ts[0], z, targs, tab.order, rtol, atol))(z0)
     h0 = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
 
     ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
@@ -1261,10 +1283,15 @@ def batched_mali_adaptive_solve(
     zq0 = lattice_encode(z0, scale_exp)
     vq0 = lattice_encode(v0, scale_exp)
 
+    row_tol = _row_tolerances(rtol, atol, B)
     hinit_evals = 2 if h0 is None else 0  # hinit costs 2 f-evals per elt
     if h0 is None:
-        h0 = jax.vmap(lambda z: initial_stepsize(
-            f, ts[0], z, targs, ALF_ORDER, rtol, atol))(z0)
+        if row_tol is not None:
+            h0 = jax.vmap(lambda z, rt, at: initial_stepsize(
+                f, ts[0], z, targs, ALF_ORDER, rt, at))(z0, *row_tol)
+        else:
+            h0 = jax.vmap(lambda z: initial_stepsize(
+                f, ts[0], z, targs, ALF_ORDER, rtol, atol))(z0)
     h0 = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
 
     ys = _buffer_set(_empty_buffer(z0, n_eval), 0, z0)
@@ -1309,9 +1336,13 @@ def batched_mali_adaptive_solve(
         res = alf_step_batched(f, t, h_use, c["zq"], c["vq"], scale_exp,
                                z0, targs)
         z_f = lattice_decode(c["zq"], scale_exp, z0)
-        ratio = jax.vmap(
-            lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
-                res.err, z_f, res.z_next)                         # (B,)
+        if row_tol is not None:
+            ratio = jax.vmap(error_ratio)(
+                res.err, z_f, res.z_next, *row_tol)               # (B,)
+        else:
+            ratio = jax.vmap(
+                lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
+                    res.err, z_f, res.z_next)                     # (B,)
         railed = h_use <= h_min * (1 + 1e-3)
         if guard_nonfinite:
             # per-row ratio read (see mali_adaptive_solve: the decoded

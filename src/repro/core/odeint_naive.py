@@ -37,6 +37,7 @@ from .integrate import (
     _freeze_fill,
     _nonfinite_any,
     _nonfinite_rows,
+    _row_tolerances,
     fixed_grid_solve,
     natural_grid_outputs,
     natural_grid_outputs_batched,
@@ -292,9 +293,14 @@ def odeint_naive_batched(
     tiny = jnp.asarray(jnp.finfo(tdt).eps, tdt)
     targs = _as_tuple(args)
 
+    row_tol = _row_tolerances(rtol, atol, B)
     if h0 is None:
-        h_init = jax.vmap(lambda z: initial_stepsize(
-            f, ts[0], z, targs, solver.order, rtol, atol))(z0)
+        if row_tol is not None:
+            h_init = jax.vmap(lambda z, rt, at: initial_stepsize(
+                f, ts[0], z, targs, solver.order, rt, at))(z0, *row_tol)
+        else:
+            h_init = jax.vmap(lambda z: initial_stepsize(
+                f, ts[0], z, targs, solver.order, rtol, atol))(z0)
     else:
         h_init = jnp.broadcast_to(jnp.asarray(h0, tdt), (B,))
 

@@ -343,7 +343,10 @@ def rk_step_batched(
     carry a leading batch dim B; ``t`` and ``h`` are (B,).  With
     ``err_scale=(rtol, atol)`` the result's ``err_ratio`` is the (B,)
     vector of per-element scaled error norms (then ``err`` is None — no
-    consumer).  An element whose h_b is 0 passes through unchanged
+    consumer); ``rtol``/``atol`` may themselves be (B,) arrays, scaling
+    each element's norm against its own tolerance (the per-request QoS
+    path — equal-tolerance rows stay bitwise identical to the scalar
+    form).  An element whose h_b is 0 passes through unchanged
     bit-exactly: the masking contract the batched adaptive loop and the
     ACA batched backward sweep use to freeze finished elements.
 
@@ -377,9 +380,21 @@ def rk_step_batched(
             _weighted_sum(ks, tab.b_err))
         if err_scale is not None:
             rtol, atol = err_scale
-            ratio = jax.vmap(
-                lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
-                    err, z, z_next)
+            if jnp.ndim(rtol) > 0 or jnp.ndim(atol) > 0:
+                # per-row tolerances (per-request QoS): each element's
+                # error norm is scaled against its own (rtol, atol) —
+                # same arithmetic per row as the scalar path, so
+                # equal-tolerance rows stay bitwise identical
+                bsz = h.shape[0]
+                rt = jnp.broadcast_to(
+                    jnp.asarray(rtol, jnp.float32), (bsz,))
+                at = jnp.broadcast_to(
+                    jnp.asarray(atol, jnp.float32), (bsz,))
+                ratio = jax.vmap(error_ratio)(err, z, z_next, rt, at)
+            else:
+                ratio = jax.vmap(
+                    lambda e, a, b: error_ratio(e, a, b, rtol, atol))(
+                        err, z, z_next)
             err = None
 
     k_last = ks[-1] if tab.fsal else ks[0]

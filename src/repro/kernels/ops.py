@@ -26,6 +26,7 @@ from .rk_stage import (
     increment_batched_jnp,
     increment_jnp,
     rk_stage_combine_err_batched_pallas,
+    rk_stage_combine_err_batched_rowtol_pallas,
     rk_stage_combine_err_pallas,
     rk_stage_combine_pallas,
     rk_stage_increment_batched_pallas,
@@ -209,6 +210,39 @@ _rk_combine_err_batched.defvjp(_rk_combine_err_batched_fwd,
                                _rk_combine_err_batched_bwd)
 
 
+# Per-row-tolerance variant: rtol/atol are *traced* (B,) arrays instead
+# of static floats, so they ride the kernel as loaded refs.  They carry
+# no cotangent (zeros returned) — the same convention as the static
+# path, where tolerances are nondiff: the error norm's dependence on
+# the tolerance is control-flow plumbing, not a differentiable quantity.
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _rk_combine_err_batched_rowtol(z, k, h, rtol, atol, b, e, block,
+                                   interpret):
+    zn, partials = rk_stage_combine_err_batched_rowtol_pallas(
+        z, k, h, b, e, rtol, atol, block=block, interpret=interpret)
+    return zn, partials.sum(axis=-1)
+
+
+def _rk_combine_err_batched_rowtol_fwd(z, k, h, rtol, atol, b, e, block,
+                                       interpret):
+    return (_rk_combine_err_batched_rowtol(z, k, h, rtol, atol, b, e,
+                                           block, interpret),
+            (z, k, h, rtol, atol))
+
+
+def _rk_combine_err_batched_rowtol_bwd(b, e, block, interpret, res, g):
+    z, k, h, rtol, atol = res
+    _, vjp = jax.vjp(
+        lambda z_, k_, h_: combine_err_batched_jnp(z_, k_, h_, b, e, rtol,
+                                                   atol), z, k, h)
+    dz, dk, dh = vjp(g)
+    return dz, dk, dh, jnp.zeros_like(rtol), jnp.zeros_like(atol)
+
+
+_rk_combine_err_batched_rowtol.defvjp(_rk_combine_err_batched_rowtol_fwd,
+                                      _rk_combine_err_batched_rowtol_bwd)
+
+
 def rk_stage_increment_batched(z, k, h, a, *, block=None):
     """Per-row fused stage argument z + h_b·Σ_j a_j k_j over a (B, N)
     batch; differentiable.  Rows with h_b = 0 pass through bit-exactly
@@ -225,11 +259,23 @@ def rk_stage_combine_err_batched(z, k, h, b, e, rtol, atol, *, block=None):
     Returns (z_next (B, N), sq_sum (B,)); sqrt(sq_sum / N) is each batch
     element's own ``error_ratio`` — the per-sample accept/reject signal.
     The (B, N) err buffer is never materialized.
+
+    ``rtol``/``atol`` are static scalars (baked into the kernel, the
+    classic path) or (B,) arrays — then each row is error-controlled
+    against its own tolerance (per-request QoS), loaded per grid row
+    like ``h``.  Tolerances never carry gradient on either path.
     """
+    bw = tuple(float(x) for x in b)
+    ew = tuple(float(x) for x in e)
+    blk = _BLOCK if block is None else int(block)
+    if jnp.ndim(rtol) > 0 or jnp.ndim(atol) > 0:
+        bsz = z.shape[0]
+        rt = jnp.broadcast_to(jnp.asarray(rtol, jnp.float32), (bsz,))
+        at = jnp.broadcast_to(jnp.asarray(atol, jnp.float32), (bsz,))
+        return _rk_combine_err_batched_rowtol(z, k, h, rt, at, bw, ew,
+                                              blk, _interpret())
     return _rk_combine_err_batched(
-        z, k, h, tuple(float(x) for x in b), tuple(float(x) for x in e),
-        float(rtol), float(atol),
-        _BLOCK if block is None else int(block), _interpret())
+        z, k, h, bw, ew, float(rtol), float(atol), blk, _interpret())
 
 
 def rmsnorm(x, w, eps: float = 1e-6, **kw):

@@ -31,6 +31,14 @@ per-element instead of one global reduction over the whole batch.
 Masking of rejected/finished elements is by zeroed per-row h: a row with
 h = 0 computes z + 0·Σ… which round-trips bit-exactly through the f32
 accumulator, so frozen elements pass through unchanged.
+
+The ``*_rowtol`` variant additionally loads **per-row tolerances**: rtol
+and atol arrive as (B,) arrays through (1, 1) row blocks — the ``h``
+pattern — instead of baked compile-time floats, so every batch element
+is error-controlled against its own (rtol, atol).  This is the
+per-request tolerance QoS knob of the serving engine; the arithmetic is
+unchanged, so equal-tolerance rows stay bitwise identical to the baked
+kernel's.
 """
 
 from __future__ import annotations
@@ -95,14 +103,24 @@ def increment_batched_jnp(z, k, h, a):
 
 def combine_err_batched_jnp(z, k, h, b, e, rtol, atol):
     """(B, N) twin of ``combine_err_jnp``: per-row combine + per-row
-    scaled-error square sums (B,)."""
+    scaled-error square sums (B,).
+
+    ``rtol``/``atol`` may be scalars or per-row (B,) arrays (the
+    per-request tolerance QoS path): a row's tolerance broadcasts down
+    its lanes exactly like the baked scalar — same f32 arithmetic, so a
+    row solved at tolerance τ is bitwise the all-τ batch's row.
+    """
     kf = k.astype(jnp.float32)                          # (s, B, N)
     bw = jnp.asarray(b, jnp.float32)[:, None, None]
     ew = jnp.asarray(e, jnp.float32)[:, None, None]
     hv = h.astype(jnp.float32)[:, None]
     zn = (z.astype(jnp.float32) + hv * (bw * kf).sum(0)).astype(z.dtype)
     err = hv * (ew * kf).sum(0)
-    scale = atol + rtol * jnp.maximum(
+    rt = jnp.asarray(rtol, jnp.float32)
+    at = jnp.asarray(atol, jnp.float32)
+    rt = rt[:, None] if rt.ndim else rt
+    at = at[:, None] if at.ndim else at
+    scale = at + rt * jnp.maximum(
         jnp.abs(z.astype(jnp.float32)), jnp.abs(zn.astype(jnp.float32)))
     r = err / scale
     return zn, jnp.sum(r * r, axis=-1)
@@ -453,4 +471,90 @@ def rk_stage_combine_err_batched_pallas(
         ],
         interpret=interpret,
     )(h2d, z, k)
+    return (out[:, :n] if pad else out), nrm
+
+
+def _combine_err_batched_rowtol_kernel(h_ref, rtol_ref, atol_ref, z_ref,
+                                       k_ref, out_ref, nrm_ref, *, b, e):
+    h = h_ref[0, 0]
+    rtol = rtol_ref[0, 0]
+    atol = atol_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(z)
+    err = jnp.zeros_like(z)
+    for i, (bi, ei) in enumerate(zip(b, e)):
+        ki = k_ref[i, ...].astype(jnp.float32)
+        if bi != 0.0:
+            acc = acc + bi * ki
+        if ei != 0.0:
+            err = err + ei * ki
+    zn = z + h * acc
+    err = h * err
+    out_ref[...] = zn.astype(out_ref.dtype)
+    scale = atol + rtol * jnp.maximum(jnp.abs(z), jnp.abs(zn))
+    r = err / scale
+    nrm_ref[0, 0] = jnp.sum(r * r)
+
+
+def rk_stage_combine_err_batched_rowtol_pallas(
+    z: jnp.ndarray,          # (B, N) flattened per-sample states
+    k: jnp.ndarray,          # (s, B, N) stacked stage derivatives
+    h: jnp.ndarray,          # (B,) per-row stepsizes
+    b: Sequence[float],      # solution weights
+    e: Sequence[float],      # embedded-error weights
+    rtol: jnp.ndarray,       # (B,) per-row relative tolerances
+    atol: jnp.ndarray,       # (B,) per-row absolute tolerances
+    *,
+    block: int = _BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row-tolerance twin of ``rk_stage_combine_err_batched_pallas``.
+
+    Identical combine arithmetic, but ``rtol``/``atol`` arrive as (B,)
+    arrays loaded per grid row through (1, 1) blocks — the same pattern
+    as the per-row stepsize ``h`` — instead of being baked into the
+    kernel as compile-time constants.  A row whose loaded tolerance
+    equals a baked scalar computes bit-identical f32 values (same ops,
+    same tile partial-sum order), which is what lets tight- and
+    loose-tolerance batch elements share one solve while each matches
+    its own solo trajectory bitwise (the serving QoS contract).
+    """
+    s, bsz, n = k.shape
+    assert z.shape == (bsz, n)
+    b = tuple(b)
+    e = tuple(e)
+
+    pad = (-n) % block
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)), constant_values=1)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad)))
+    npad = n + pad
+    grid = (bsz, npad // block)
+    h2d = jnp.asarray(h, jnp.float32).reshape(bsz, 1)
+    rt2d = jnp.broadcast_to(
+        jnp.asarray(rtol, jnp.float32), (bsz,)).reshape(bsz, 1)
+    at2d = jnp.broadcast_to(
+        jnp.asarray(atol, jnp.float32), (bsz,)).reshape(bsz, 1)
+
+    row_spec = pl.BlockSpec((1, 1), lambda r, i: (r, 0))
+    out, nrm = pl.pallas_call(
+        functools.partial(_combine_err_batched_rowtol_kernel, b=b, e=e),
+        grid=grid,
+        in_specs=[
+            row_spec,
+            row_spec,
+            row_spec,
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((s, 1, block), lambda r, i: (0, r, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda r, i: (r, i)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, npad), z.dtype),
+            jax.ShapeDtypeStruct((bsz, npad // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h2d, rt2d, at2d, z, k)
     return (out[:, :n] if pad else out), nrm

@@ -1,5 +1,31 @@
-"""repro.serve — batched prefill + decode serving engine."""
+"""repro.serve — serving engines.
+
+* ``ServeEngine`` — batched prefill + decode LM serving.
+* ``NodeServeEngine`` — continuous-batching NODE solve serving with
+  per-request tolerance QoS (see ``docs/serving.md``).
+"""
 
 from .engine import ServeEngine, ServeConfig
+from .node_engine import (
+    STATUS_DEADLINE_MISS,
+    NodeEngineConfig,
+    NodeRequest,
+    NodeServeEngine,
+    RequestQueue,
+    RequestResult,
+    augment_field,
+    augment_state,
+)
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = [
+    "ServeEngine",
+    "ServeConfig",
+    "STATUS_DEADLINE_MISS",
+    "NodeEngineConfig",
+    "NodeRequest",
+    "NodeServeEngine",
+    "RequestQueue",
+    "RequestResult",
+    "augment_field",
+    "augment_state",
+]

@@ -28,6 +28,11 @@ from repro.models.lm import Model
 
 PyTree = Any
 
+# generate() with temperature sampling and no explicit key falls back to
+# a fixed seed; warn once per process so the silent determinism is at
+# least visible (tests monkeypatch this back to False to re-trigger).
+_warned_default_key = False
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -62,8 +67,27 @@ class ServeEngine:
     def generate(self, tokens: jnp.ndarray,
                  key: Optional[jax.Array] = None
                  ) -> Dict[str, jnp.ndarray]:
-        """tokens (B, S_prompt) -> {"tokens": (B, S_prompt+new)}."""
+        """tokens (B, S_prompt) -> {"tokens": (B, S_prompt+new)}.
+
+        ``key=None`` uses a *fixed* ``PRNGKey(0)``: with
+        ``temperature > 0`` every keyless call then samples the same
+        sequence — deterministic and reproducible, but not fresh
+        randomness.  Pass your own key for varied samples; the fallback
+        warns once per process when temperature sampling is active
+        (greedy decoding ignores the key entirely).
+        """
         if key is None:
+            if self.cfg.temperature > 0.0:
+                global _warned_default_key
+                if not _warned_default_key:
+                    _warned_default_key = True
+                    import warnings
+                    warnings.warn(
+                        "ServeEngine.generate(key=None) with "
+                        "temperature > 0 uses a fixed PRNGKey(0): every "
+                        "keyless call samples identical tokens. Pass an "
+                        "explicit key for fresh randomness.",
+                        UserWarning, stacklevel=2)
             key = jax.random.PRNGKey(0)
         b, s = tokens.shape
         logits, caches = self.prefill(tokens)

@@ -1,0 +1,562 @@
+"""Deterministic serving tier: per-row tolerance QoS + the
+continuous-batching NODE engine.
+
+Everything runs on simulated time (``SimClock``) with seeded traffic —
+no wall-clock anywhere — so slot-swap order, latencies, and admission
+logs are pinned exactly and replay bit-for-bit.
+
+Covers, per ISSUE 10:
+  * the (B,) per-row rtol/atol plumbing through the batched adaptive
+    engines (bitwise scalar-parity, per-row controller isolation,
+    validation errors);
+  * the canonical-chunk augmentation (``augment_field``/``augment_state``);
+  * queue/clock/request-model unit behaviour;
+  * engine serving semantics: solo parity, QoS bitwise isolation,
+    failure isolation via fault injection, retry/status policies,
+    deadlines, static-vs-continuous scheduling, determinism.
+
+The hypothesis vmap-of-solo property lives in
+``test_serve_node_properties.py`` (skipped when hypothesis is absent
+so this tier still runs).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from faults import faulty_field
+from repro.core import odeint
+from repro.core.integrate import SolveStatus
+from repro.serve import (
+    STATUS_DEADLINE_MISS,
+    NodeEngineConfig,
+    NodeRequest,
+    NodeServeEngine,
+    RequestQueue,
+    augment_field,
+    augment_state,
+)
+from repro.serve.node_engine import SimClock
+
+DIM = 6
+W = jnp.float32(1.3)
+ARGS = (W,)
+
+
+def field(t, z, w):
+    return jnp.tanh(w * z) - 0.1 * z * jnp.sin(t)
+
+
+def _z0(seed, n=1):
+    z = np.random.default_rng(seed).normal(size=(n, DIM)).astype(np.float32)
+    return z[0] if n == 1 else z
+
+
+def _parity_bound(res, req, ref):
+    """The documented chunked-serving parity bound (docs/serving.md)."""
+    return (res.n_chunks + 1) * (
+        req.atol + req.rtol * max(1.0, float(np.abs(ref).max())))
+
+
+# --------------------------------------------------------- shared engines
+# Module-scoped so each static configuration compiles its chunk solve
+# once; every test takes them through the function-scoped reset wrappers.
+
+@pytest.fixture(scope="module")
+def _eng_default():
+    return NodeServeEngine(field, DIM, ARGS,
+                           NodeEngineConfig(slots=4, chunk_dt=0.5))
+
+
+@pytest.fixture(scope="module")
+def _eng_static():
+    return NodeServeEngine(
+        field, DIM, ARGS,
+        NodeEngineConfig(slots=2, chunk_dt=0.5, static_batch=True))
+
+
+@pytest.fixture(scope="module")
+def _eng_mali():
+    return NodeServeEngine(field, DIM, ARGS,
+                           NodeEngineConfig(slots=2, grad_method="mali"))
+
+
+@pytest.fixture
+def eng(_eng_default):
+    _eng_default.reset()
+    return _eng_default
+
+
+@pytest.fixture
+def eng_static(_eng_static):
+    _eng_static.reset()
+    return _eng_static
+
+
+@pytest.fixture
+def eng_mali(_eng_mali):
+    _eng_mali.reset()
+    return _eng_mali
+
+
+# ------------------------------------------------- per-row tolerance core
+
+class TestRowTolerances:
+    TS = jnp.asarray([0.0, 0.8], jnp.float32)
+
+    def _batch(self, B=4, seed=0):
+        return jnp.asarray(_z0(seed, B))
+
+    def test_rowtol_requires_batch_axis(self):
+        with pytest.raises(ValueError, match="per-element"):
+            odeint(field, self._batch()[0], self.TS, ARGS,
+                   rtol=jnp.full((4,), 1e-4))
+
+    def test_rowtol_rank2_raises(self):
+        with pytest.raises(ValueError, match="rank-1"):
+            odeint(field, self._batch(), self.TS, ARGS,
+                   rtol=jnp.full((4, 1), 1e-4), batch_axis=0)
+
+    def test_rowtol_wrong_length_raises(self):
+        with pytest.raises(ValueError, match="one entry per batch row"):
+            odeint(field, self._batch(), self.TS, ARGS,
+                   rtol=jnp.full((3,), 1e-4), batch_axis=0)
+
+    def test_rowtol_fixed_solver_raises(self):
+        with pytest.raises(ValueError, match="adaptive"):
+            odeint(field, self._batch(), self.TS, ARGS, solver="rk4",
+                   grad_method="naive", rtol=jnp.full((4,), 1e-4),
+                   batch_axis=0)
+
+    def test_rowtol_mesh_raises(self):
+        from repro.distributed import shard_mesh
+        mesh = shard_mesh()
+        with pytest.raises(ValueError, match="mesh"):
+            odeint(field, self._batch(), self.TS, ARGS,
+                   rtol=jnp.full((4,), 1e-4), batch_axis=0, mesh=mesh)
+
+    @pytest.mark.parametrize("use_pallas", [False, True],
+                             ids=["pytree", "pallas"])
+    @pytest.mark.parametrize("gm", ["aca", "adjoint", "naive", "mali"])
+    def test_equal_rowtol_bitwise_matches_scalar(self, gm, use_pallas):
+        """(B,) arrays of one tolerance == the scalar solve, bit for bit
+        — the scalar fast path and the row-tol kernel compute identical
+        f32 arithmetic."""
+        z = self._batch()
+        kw = dict(grad_method=gm, use_pallas=use_pallas, batch_axis=0)
+        ys_s, st_s = odeint(field, z, self.TS, ARGS, rtol=1e-4,
+                            atol=1e-6, **kw)
+        ys_r, st_r = odeint(field, z, self.TS, ARGS,
+                            rtol=jnp.full((4,), 1e-4),
+                            atol=jnp.full((4,), 1e-6), **kw)
+        assert np.array_equal(np.asarray(ys_s), np.asarray(ys_r))
+        assert np.array_equal(np.asarray(st_s.n_trials),
+                              np.asarray(st_r.n_trials))
+
+    @pytest.mark.parametrize("use_pallas", [False, True],
+                             ids=["pytree", "pallas"])
+    def test_mixed_rowtol_rows_match_uniform_batches(self, use_pallas):
+        """Row b of a mixed-tolerance batch is bit-identical to row b of
+        the all-that-tolerance batch: every row runs its own controller
+        and rows never interact (the QoS-isolation primitive)."""
+        z = self._batch()
+        tols = [1e-3, 1e-4, 1e-5, 1e-6]
+        kw = dict(use_pallas=use_pallas, batch_axis=0)
+        ys_mix, st_mix = odeint(field, z, self.TS, ARGS,
+                                rtol=jnp.asarray(tols),
+                                atol=jnp.asarray(tols) * 1e-2, **kw)
+        trials = np.asarray(st_mix.n_trials)
+        for b, tol in enumerate(tols):
+            ys_u, st_u = odeint(field, z, self.TS, ARGS, rtol=tol,
+                                atol=tol * 1e-2, **kw)
+            assert np.array_equal(np.asarray(ys_mix)[:, b],
+                                  np.asarray(ys_u)[:, b]), (b, tol)
+            assert trials[b] == np.asarray(st_u.n_trials)[b]
+        # per-row controllers really differ: tighter tol, more trials
+        assert trials[0] < trials[-1]
+
+    def test_rowtol_grad_finite(self):
+        z = self._batch()
+
+        def loss(z0):
+            ys, _ = odeint(field, z0, self.TS, ARGS,
+                           rtol=jnp.asarray([1e-3, 1e-4, 1e-5, 1e-6]),
+                           atol=1e-7, batch_axis=0)
+            return jnp.sum(ys[-1] ** 2)
+
+        g = jax.grad(loss)(z)
+        assert np.isfinite(np.asarray(g)).all()
+
+
+# ------------------------------------------------- canonical augmentation
+
+class TestAugmentation:
+    def test_augment_state_layout(self):
+        z = jnp.arange(3.0)
+        zaug = augment_state(z, 2.5, 0.5)
+        assert zaug.shape == (5,)
+        assert np.allclose(np.asarray(zaug), [0, 1, 2, 2.5, 0.5])
+
+    def test_augment_field_matches_physical_window(self):
+        """The canonical solve over s ∈ [0, 1] equals the physical solve
+        over [t_off, t_off + delta] (same accuracy class)."""
+        z0 = _z0(3)
+        t_off, delta = 1.2, 0.7
+        zaug = augment_state(jnp.asarray(z0), t_off, delta)
+        ys, st = odeint(augment_field(field), zaug,
+                        jnp.asarray([0.0, 1.0], jnp.float32), ARGS,
+                        rtol=1e-6, atol=1e-8)
+        ys_p, _ = odeint(field, jnp.asarray(z0),
+                         jnp.asarray([t_off, t_off + delta], jnp.float32),
+                         ARGS, rtol=1e-6, atol=1e-8)
+        assert int(st.status) == SolveStatus.OK
+        np.testing.assert_allclose(np.asarray(ys[-1][:DIM]),
+                                   np.asarray(ys_p[-1]), atol=1e-4)
+
+    def test_augment_aux_components_exactly_constant(self):
+        zaug = augment_state(jnp.asarray(_z0(4)), 1.2, 0.7)
+        ys, _ = odeint(augment_field(field), zaug,
+                       jnp.asarray([0.0, 1.0], jnp.float32), ARGS,
+                       rtol=1e-4, atol=1e-6)
+        out = np.asarray(ys[-1])
+        assert out[DIM] == np.float32(1.2)
+        assert out[DIM + 1] == np.float32(0.7)
+
+    def test_empty_slot_is_identity(self):
+        """delta = 0 zeroes the field: the padding row passes through."""
+        zaug = augment_state(jnp.zeros(DIM), 0.0, 0.0)
+        ys, st = odeint(augment_field(field), zaug,
+                        jnp.asarray([0.0, 1.0], jnp.float32), ARGS,
+                        rtol=1e-3, atol=1e-3)
+        assert np.array_equal(np.asarray(ys[-1]), np.zeros(DIM + 2))
+        assert int(st.status) == SolveStatus.OK
+
+
+# ------------------------------------------------------ queue/clock/model
+
+class TestQueueAndClock:
+    def test_queue_fifo_within_arrival(self):
+        q = RequestQueue()
+        r = NodeRequest(z0=np.zeros(DIM, np.float32))
+        ids = [q.push(1.0, r), q.push(1.0, r), q.push(0.5, r)]
+        order = [q.pop_ready(10.0)[1] for _ in range(3)]
+        assert order == [ids[2], ids[0], ids[1]]
+
+    def test_queue_pop_ready_respects_arrival(self):
+        q = RequestQueue()
+        r = NodeRequest(z0=np.zeros(DIM, np.float32))
+        q.push(5.0, r)
+        assert q.pop_ready(4.9) is None
+        assert q.next_arrival() == 5.0
+        assert q.pop_ready(5.0) is not None
+        assert len(q) == 0
+
+    def test_simclock_round_cost(self):
+        c = SimClock(trial_cost=2.0, chunk_overhead=3.0)
+        assert c.advance_round(5) == 13.0
+        assert c.now == 13.0
+        c.jump_to(10.0)          # never rewinds
+        assert c.now == 13.0
+        c.jump_to(20.0)
+        assert c.now == 20.0
+
+    def test_request_validation(self):
+        z = np.zeros(DIM, np.float32)
+        with pytest.raises(ValueError, match="t1 > t0"):
+            NodeRequest(z0=z, t0=1.0, t1=1.0)
+        with pytest.raises(ValueError, match="on_failure"):
+            NodeRequest(z0=z, on_failure="explode")
+        with pytest.raises(ValueError, match="h0"):
+            NodeRequest(z0=z, h0=0.0)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="slots"):
+            NodeEngineConfig(slots=0)
+        with pytest.raises(ValueError, match="chunk_dt"):
+            NodeEngineConfig(chunk_dt=0.0)
+
+    def test_submit_shape_check(self, eng):
+        with pytest.raises(ValueError, match="shape"):
+            eng.submit(NodeRequest(z0=np.zeros(DIM + 1, np.float32)))
+
+
+# --------------------------------------------------------- engine serving
+
+class TestEngineServing:
+    def test_single_request_matches_solo_odeint(self, eng):
+        req = NodeRequest(z0=_z0(10), t0=0.0, t1=1.3, rtol=1e-5,
+                          atol=1e-7)
+        eng.submit(req, arrival=0.0)
+        res = eng.run()
+        assert len(res) == 1 and res[0].ok
+        ys, _ = odeint(field, jnp.asarray(req.z0),
+                       jnp.asarray([0.0, 1.3], jnp.float32), ARGS,
+                       rtol=1e-5, atol=1e-7)
+        ref = np.asarray(ys[-1])
+        err = np.abs(res[0].z_final - ref).max()
+        assert err <= _parity_bound(res[0], req, ref)
+
+    def test_drain_returns_every_request(self, eng):
+        for i in range(7):
+            eng.submit(NodeRequest(z0=_z0(i), t1=0.5 + 0.25 * i),
+                       arrival=float(i))
+        res = eng.run()
+        assert [r.req_id for r in res] == list(range(7))
+        assert all(r.ok for r in res)
+        assert all(r.t_finished >= r.t_admitted >= r.t_arrival
+                   for r in res)
+
+    def test_admission_log_pins_slot_swap_order(self, eng):
+        """Golden slot-swap trace on a fixed traffic pattern: short
+        requests free their slots and the queue backfills them in FIFO
+        order at chunk boundaries."""
+        horizons = [0.5, 2.0, 0.5, 0.5, 0.5, 0.5]
+        for i, h in enumerate(horizons):
+            eng.submit(NodeRequest(z0=_z0(i), t1=h), arrival=0.0)
+        res = eng.run()
+        assert all(r.ok for r in res)
+        # 4 slots: 0-3 admitted in round 0; 4 and 5 backfill slots freed
+        # by the short requests (slot 0 first — lowest index scanned
+        # first), while the long request holds slot 1 throughout.
+        assert eng.admission_log[:4] == [(0, 0, 0), (0, 1, 1),
+                                         (0, 2, 2), (0, 3, 3)]
+        assert eng.admission_log[4:] == [(1, 0, 4), (1, 2, 5)]
+        assert len({s for (_, s, rid) in eng.admission_log
+                    if rid == 1}) == 1
+
+    def test_qos_bitwise_isolation(self, eng):
+        """A request's trajectory is bit-identical whether it shares the
+        batch with three tight-tolerance neighbours or runs alone —
+        per-row controllers never interact."""
+        victim = NodeRequest(z0=_z0(20), t1=1.6, rtol=1e-3, atol=1e-5)
+        eng.submit(victim, arrival=0.0)
+        solo = eng.run()[0]
+        eng.reset()
+        eng.submit(victim, arrival=0.0)
+        for j in range(3):
+            eng.submit(NodeRequest(z0=_z0(21 + j), t1=2.0, rtol=1e-6,
+                                   atol=1e-8), arrival=0.0)
+        mixed = [r for r in eng.run() if r.req_id == 0][0]
+        assert np.array_equal(solo.z_final, mixed.z_final)
+        assert solo.n_trials == mixed.n_trials
+
+    def test_deterministic_replay(self, eng):
+        def trace(e):
+            for i in range(6):
+                e.submit(NodeRequest(z0=_z0(30 + i), t1=0.5 + 0.3 * i,
+                                     rtol=10.0 ** -(3 + i % 3)),
+                         arrival=1.7 * i)
+            return e.run()
+        a = trace(eng)
+        log_a = list(eng.admission_log)
+        eng.reset()
+        b = trace(eng)
+        assert log_a == eng.admission_log
+        assert [r.latency for r in a] == [r.latency for r in b]
+        assert all(np.array_equal(x.z_final, y.z_final)
+                   for x, y in zip(a, b))
+
+    def test_continuous_beats_static_tail_latency(self, eng, eng_static):
+        """One long request plus a stream of short ones: the static wave
+        scheduler makes the shorts queue behind the straggler."""
+        eng2 = NodeServeEngine(
+            field, DIM, ARGS,
+            NodeEngineConfig(slots=4, chunk_dt=0.5, static_batch=True))
+        reqs = [NodeRequest(z0=_z0(40), t1=4.0)] + [
+            NodeRequest(z0=_z0(41 + i), t1=0.5) for i in range(7)]
+        for e in (eng, eng2):
+            for i, r in enumerate(reqs):
+                e.submit(r, arrival=0.5 * i)
+        lat_c = sorted(r.latency for r in eng.run())
+        lat_s = sorted(r.latency for r in eng2.run())
+        assert lat_c[-1] < lat_s[-1]
+        assert sum(lat_c) < sum(lat_s)
+
+    def test_static_mode_admits_only_full_waves(self, eng_static):
+        for i in range(5):
+            eng_static.submit(NodeRequest(z0=_z0(50 + i), t1=1.0),
+                              arrival=0.0)
+        res = eng_static.run()
+        assert all(r.ok for r in res)
+        rounds = [rd for (rd, _, _) in eng_static.admission_log]
+        # 2 slots -> admissions come in pairs sharing a round (the last
+        # wave is the leftover single)
+        assert rounds[0] == rounds[1]
+        assert rounds[2] == rounds[3]
+        assert rounds[2] > rounds[1]
+        # no admission while any slot is busy: each wave's admission
+        # round must see both slots free (logged pairs only)
+        occ = eng_static.occupancy_log
+        assert max(occ) <= 2
+
+    def test_deadline_expired_in_queue_dropped(self):
+        e = NodeServeEngine(field, DIM, ARGS,
+                            NodeEngineConfig(slots=1, chunk_dt=0.5))
+        e.submit(NodeRequest(z0=_z0(60), t1=3.0, rtol=1e-6), arrival=0.0)
+        e.submit(NodeRequest(z0=_z0(61), t1=1.0, deadline=5.0),
+                 arrival=0.0)
+        res = e.run()
+        assert res[0].ok
+        assert res[1].status == STATUS_DEADLINE_MISS
+        assert not res[1].ok and res[1].deadline_missed
+        assert res[1].n_chunks == 0
+
+    def test_deadline_late_completion_flagged(self, eng):
+        eng.submit(NodeRequest(z0=_z0(62), t1=2.0, deadline=3.0),
+                   arrival=0.0)
+        r = eng.run()[0]
+        assert r.status == SolveStatus.OK
+        assert r.deadline_missed and not r.ok
+        assert np.isfinite(r.z_final).all()
+
+    def test_failure_isolated_to_faulty_request(self):
+        """A NaN-poisoned request freezes with its own status while its
+        batch-mates finish bitwise-identically to a run without it."""
+        bad = faulty_field(field, kind="nan", t_ge=10.2)
+        cfg = NodeEngineConfig(slots=4, chunk_dt=0.5)
+        e1 = NodeServeEngine(bad, DIM, ARGS, cfg)
+        # victim integrates over [10, 11] — only it enters the window
+        e1.submit(NodeRequest(z0=_z0(70), t0=10.0, t1=11.0), arrival=0.0)
+        for j in range(3):
+            e1.submit(NodeRequest(z0=_z0(71 + j), t1=1.0), arrival=0.0)
+        res = e1.run()
+        assert res[0].status == SolveStatus.NONFINITE_STATE
+        assert not res[0].ok and np.isfinite(res[0].z_final).all()
+        e1.reset()
+        for j in range(3):
+            e1.submit(NodeRequest(z0=_z0(71 + j), t1=1.0), arrival=0.0)
+        clean = e1.run()
+        for j in range(3):
+            assert np.array_equal(res[1 + j].z_final, clean[j].z_final)
+            assert res[1 + j].ok
+
+    def test_on_failure_retry_succeeds_at_loosened_tol(self):
+        """An impossibly tight f32 tolerance fails its first pass; the
+        retry policy re-enqueues once at retry_tol_factor× looser and
+        completes."""
+        e = NodeServeEngine(
+            field, DIM, ARGS,
+            NodeEngineConfig(slots=2, retry_tol_factor=1e6))
+        e.submit(NodeRequest(z0=_z0(80), t1=1.0, rtol=1e-12, atol=1e-14,
+                             on_failure="retry"), arrival=0.0)
+        r = e.run()[0]
+        assert r.ok and r.retried
+        assert r.status == SolveStatus.OK
+
+    def test_on_failure_retry_gives_up_after_one_retry(self):
+        bad = faulty_field(field, kind="nan", t_ge=0.0)
+        e = NodeServeEngine(bad, DIM, ARGS, NodeEngineConfig(slots=2))
+        e.submit(NodeRequest(z0=_z0(81), t1=1.0, on_failure="retry"),
+                 arrival=0.0)
+        r = e.run()[0]
+        assert r.retried and not r.ok
+        assert r.status == SolveStatus.NONFINITE_STATE
+
+    def test_all_requests_failing_still_drains(self):
+        bad = faulty_field(field, kind="nan", t_ge=0.0)
+        e = NodeServeEngine(bad, DIM, ARGS, NodeEngineConfig(slots=2))
+        for i in range(4):
+            e.submit(NodeRequest(z0=_z0(82 + i), t1=1.0), arrival=0.0)
+        res = e.run()
+        assert len(res) == 4
+        assert all(not r.ok for r in res)
+        assert all(np.isfinite(r.z_final).all() for r in res)
+
+    def test_empty_engine_run_is_empty(self, eng):
+        assert eng.run() == []
+
+    def test_request_h0_changes_first_step(self, eng):
+        base = NodeRequest(z0=_z0(90), t1=0.5, rtol=1e-4)
+        eng.submit(base, arrival=0.0)
+        r_auto = eng.run()[0]
+        eng.reset()
+        eng.submit(NodeRequest(z0=_z0(90), t1=0.5, rtol=1e-4, h0=1e-4),
+                   arrival=0.0)
+        r_tiny = eng.run()[0]
+        assert r_auto.ok and r_tiny.ok
+        # a deliberately tiny first step costs extra trials
+        assert r_tiny.n_trials > r_auto.n_trials
+
+    def test_mali_engine_serves(self, eng_mali):
+        req = NodeRequest(z0=_z0(91), t1=1.0, rtol=1e-4)
+        eng_mali.submit(req, arrival=0.0)
+        r = eng_mali.run()[0]
+        assert r.ok
+        ys, _ = odeint(field, jnp.asarray(req.z0),
+                       jnp.asarray([0.0, 1.0], jnp.float32), ARGS,
+                       grad_method="mali", rtol=1e-4, atol=1e-6)
+        ref = np.asarray(ys[-1])
+        assert np.abs(r.z_final - ref).max() <= _parity_bound(r, req, ref)
+
+    def test_pallas_engine_serves(self):
+        e = NodeServeEngine(field, DIM, ARGS,
+                            NodeEngineConfig(slots=2, use_pallas=True))
+        e.submit(NodeRequest(z0=_z0(92), t1=1.0), arrival=0.0)
+        r = e.run()[0]
+        assert r.ok and np.isfinite(r.z_final).all()
+
+
+# ------------------------------------- ServeEngine key-default determinism
+
+class TestServeEngineKeyDeterminism:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        from repro.models import ModelConfig, RunConfig, build_model
+        cfg = ModelConfig(name="t", family="dense", n_layers=2,
+                          d_model=64, vocab=128, n_heads=4, n_kv_heads=2,
+                          d_ff=128)
+        m = build_model(cfg,
+                        RunConfig(compute_dtype=jnp.float32, max_seq=32))
+        return m, m.init(jax.random.PRNGKey(0))
+
+    def _engine(self, lm, temperature):
+        from repro.serve import ServeConfig, ServeEngine
+        m, params = lm
+        return ServeEngine(m, params,
+                           ServeConfig(max_new_tokens=4,
+                                       temperature=temperature),
+                           jit=False)
+
+    def test_keyless_temperature_sampling_reproducible(self, lm,
+                                                       monkeypatch):
+        """key=None is an explicit fixed PRNGKey(0): two keyless calls
+        sample identical tokens, and the fallback warns once."""
+        import warnings
+
+        from repro.serve import engine as serve_engine_mod
+        monkeypatch.setattr(serve_engine_mod, "_warned_default_key",
+                            False)
+        eng = self._engine(lm, temperature=0.8)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128,
+                                  jnp.int32)
+        with pytest.warns(UserWarning, match="PRNGKey\\(0\\)"):
+            a = eng.generate(toks)["tokens"]
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # warns only once per process
+            b = eng.generate(toks)["tokens"]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_explicit_keys_vary_and_reproduce(self, lm):
+        eng = self._engine(lm, temperature=0.8)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128,
+                                  jnp.int32)
+        a1 = eng.generate(toks, key=jax.random.PRNGKey(7))["tokens"]
+        a2 = eng.generate(toks, key=jax.random.PRNGKey(7))["tokens"]
+        b = eng.generate(toks, key=jax.random.PRNGKey(8))["tokens"]
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        assert not np.array_equal(np.asarray(a1), np.asarray(b))
+
+    def test_greedy_keyless_does_not_warn(self, lm, monkeypatch):
+        import warnings
+
+        from repro.serve import engine as serve_engine_mod
+        monkeypatch.setattr(serve_engine_mod, "_warned_default_key",
+                            False)
+        eng = self._engine(lm, temperature=0.0)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128,
+                                  jnp.int32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            eng.generate(toks)

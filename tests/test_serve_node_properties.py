@@ -1,0 +1,106 @@
+"""Hypothesis property: random request mixes (grad method × tolerance ×
+horizon) served by the coalesced continuous-batching engine match the
+one-shot vmap-of-solo reference within the documented chunked-parity
+bound (docs/serving.md), and every request completes OK.
+
+The reference is a single ``odeint(..., batch_axis=0)`` over each
+request's *whole* horizon as one canonical chunk with its own row
+tolerance — literally vmap-of-solo, compiled once for the padded
+(MAX_REQ, DIM+2) shape.
+
+Runs under the ``ci`` hypothesis profile (derandomized, no deadline —
+examples jit/compile).  Skipped (not errored) when ``hypothesis`` is
+absent from the image.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import odeint  # noqa: E402
+from repro.core.integrate import SolveStatus  # noqa: E402
+from repro.serve import (  # noqa: E402
+    NodeEngineConfig,
+    NodeRequest,
+    NodeServeEngine,
+    augment_field,
+    augment_state,
+)
+
+from test_serve_node import ARGS, DIM, _parity_bound, _z0, field  # noqa: E402
+
+MAX_REQ = 5
+H_CHOICES = (0.4, 0.8, 1.3, 2.1)
+TOL_CHOICES = (1e-3, 1e-4, 1e-5)
+
+
+@pytest.fixture(scope="module")
+def engines():
+    return {
+        "aca": NodeServeEngine(field, DIM, ARGS,
+                               NodeEngineConfig(slots=4, chunk_dt=0.5)),
+        "mali": NodeServeEngine(
+            field, DIM, ARGS,
+            NodeEngineConfig(slots=4, chunk_dt=0.5, grad_method="mali")),
+    }
+
+
+@pytest.fixture(scope="module")
+def ref_solve():
+    fa = augment_field(field)
+    ts = jnp.asarray([0.0, 1.0], jnp.float32)
+
+    @jax.jit
+    def ref(Z, rt, at):
+        ys, stats = odeint(fa, Z, ts, ARGS, rtol=rt, atol=at,
+                           batch_axis=0, max_steps=256)
+        return ys[-1], stats.status
+
+    return ref
+
+
+@settings(max_examples=8, deadline=None, derandomize=True,
+          print_blob=True)
+@given(data=st.data())
+def test_random_request_mix_matches_vmap_of_solo(data, engines,
+                                                 ref_solve):
+    method = data.draw(st.sampled_from(["aca", "mali"]), label="method")
+    n = data.draw(st.integers(1, MAX_REQ), label="n_requests")
+    seeds = data.draw(st.lists(st.integers(0, 2 ** 16), min_size=n,
+                               max_size=n), label="seeds")
+    mix = data.draw(st.lists(
+        st.tuples(st.sampled_from(TOL_CHOICES),
+                  st.sampled_from(H_CHOICES)),
+        min_size=n, max_size=n), label="tol_horizon")
+
+    e = engines[method]
+    e.reset()
+    reqs = []
+    for i, ((tol, horizon), seed) in enumerate(zip(mix, seeds)):
+        req = NodeRequest(z0=_z0(seed), t1=horizon, rtol=tol,
+                          atol=tol * 1e-2)
+        reqs.append(req)
+        e.submit(req, arrival=0.3 * i)
+    results = {r.req_id: r for r in e.run()}
+    assert all(r.ok for r in results.values())
+
+    Z = np.zeros((MAX_REQ, DIM + 2), np.float32)
+    rt = np.full((MAX_REQ,), 1e-3, np.float32)
+    at = np.full((MAX_REQ,), 1e-3, np.float32)
+    for i, req in enumerate(reqs):
+        Z[i] = np.asarray(augment_state(jnp.asarray(req.z0), req.t0,
+                                        req.t1 - req.t0))
+        rt[i], at[i] = req.rtol, req.atol
+    ref, status = ref_solve(jnp.asarray(Z), jnp.asarray(rt),
+                            jnp.asarray(at))
+    ref = np.asarray(ref)
+    assert (np.asarray(status)[:len(reqs)] == SolveStatus.OK).all()
+    for i, req in enumerate(reqs):
+        err = np.abs(results[i].z_final - ref[i, :DIM]).max()
+        assert err <= _parity_bound(results[i], req, ref[i, :DIM]), (
+            i, req.rtol, req.t1, err)

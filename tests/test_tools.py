@@ -171,6 +171,57 @@ def test_jaxpr_analyzer_cli_lists_full_matrix():
     res = _cli(["-m", "repro.analysis", "--list"])
     assert res.returncode == 0
     names = res.stdout.split()
-    assert len(names) == 31
-    for probe in ("aca-seg-pallas-sharded", "mali-batched", "aca-full-warn"):
+    assert len(names) == 37
+    for probe in ("aca-seg-pallas-sharded", "mali-batched", "aca-full-warn",
+                  "aca-full-rowtol-pallas-batched", "serve-chunk",
+                  "serve-chunk-mali"):
         assert probe in names
+
+
+# --------------------------------------------------------------------------
+# benchmarks.common percentile / latency math (serving benchmarks)
+
+from benchmarks.common import latency_summary, percentile  # noqa: E402
+
+
+def test_percentile_known_distribution():
+    xs = list(range(1, 101))          # 1..100
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 100.0
+    assert percentile(xs, 50) == 50.5  # even n: mean of middle pair
+    # p99 of 1..100 by linear interpolation: 99.01
+    assert abs(percentile(xs, 99) - 99.01) < 1e-9
+    # order-independent
+    import random
+    sh = xs[:]
+    random.Random(0).shuffle(sh)
+    assert percentile(sh, 99) == percentile(xs, 99)
+
+
+def test_percentile_odd_median_exact():
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+
+
+def test_percentile_single_sample_is_every_percentile():
+    for q in (0, 1, 50, 99, 100):
+        assert percentile([7.25], q) == 7.25
+
+
+def test_percentile_empty_and_bad_q_raise():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+    with pytest.raises(ValueError, match="q must be"):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError, match="q must be"):
+        percentile([1.0], -0.1)
+
+
+def test_latency_summary_fields():
+    s = latency_summary([4, 1, 3, 2])
+    assert s["n"] == 4
+    assert s["p50"] == 2.5
+    assert s["max"] == 4.0
+    assert s["mean"] == 2.5
+    assert s["p99"] == pytest.approx(3.97)
+    with pytest.raises(ValueError, match="empty"):
+        latency_summary([])
